@@ -1,0 +1,59 @@
+"""Paper Fig. 10: block-size trade-off — attainable pruning rate vs
+normalized index overhead (NIO).
+
+(a) On a task-trained RNN, search the max lossless rate per block size.
+(b) On RNN-statistics weight matrices (paper-dim), the NIO per block
+    size at a fixed rate, vs the CSR overhead of non-structured pruning.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import CSBMatrix, CSBSpec, csb_project, magnitude_project
+from .common import csb_encode_weight, emit, synthetic_rnn_weight, \
+    train_rnn_classifier
+
+
+def run() -> None:
+    # -- (a) lossless rate per block size (small trained model) ----------
+    for bm in (8, 16):
+        t0 = time.perf_counter()
+        _, dense_params, acc_fn = train_rnn_classifier("gru", seed=1)
+        target = acc_fn() - 0.05
+        best = 0.0
+        for rate in (0.5, 0.75, 0.875):
+            specs = jax.tree.map(lambda _: None, dense_params)
+            for k, w in dense_params.items():
+                if hasattr(w, "ndim") and w.ndim == 2 \
+                        and k not in ("emb", "out"):
+                    specs[k] = CSBSpec(bm=bm, bn=bm, prune_rate=rate)
+            _, _, acc2 = train_rnn_classifier("gru", specs=specs, seed=1,
+                                              steps=120)
+            if acc2() >= target:
+                best = rate
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig10a/block{bm}/lossless_rate", dt,
+             f"{1/(1-best):.2f}x" if best else "none")
+
+    # -- (b) NIO vs block size on paper-dim matrices ----------------------
+    key = jax.random.PRNGKey(0)
+    w = synthetic_rnn_weight(key, (1024, 1024))
+    rate = 0.9
+    nnz_ns = int((np.asarray(magnitude_project(w, rate)) != 0).sum())
+    emit("fig10b/nonstructured/csr_nio", 0.0,
+         f"{CSBMatrix.csr_nio(nnz_ns, 1024):.3f}")
+    for bm in (16, 32, 64, 128):
+        t0 = time.perf_counter()
+        spec = CSBSpec(bm=bm, bn=bm, prune_rate=rate)
+        csb = csb_encode_weight(csb_project(w, spec), spec)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig10b/block{bm}/nio", dt, f"{csb.nio():.3f}")
+        emit(f"fig10b/block{bm}/achieved_cr", 0.0,
+             f"{csb.compression_ratio():.2f}x")
+
+
+if __name__ == "__main__":
+    run()

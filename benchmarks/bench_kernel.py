@@ -1,0 +1,58 @@
+"""CSB-MVM Pallas kernel accounting (replaces paper Fig. 11's FPGA
+resource table with the TPU-relevant quantities): VMEM working set per
+BlockSpec tile, padded-vs-true FLOPs across block sizes / pruning rates,
+and interpret-mode allclose latency vs the jnp oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSBSpec, csb_masks, csb_project, padded_csb_from_dense
+from repro.kernels.ops import csb_matvec
+from repro.kernels.ref import csb_mvm_ref
+from .common import emit, synthetic_rnn_weight, timed
+
+
+def vmem_bytes(p, batch_tile: int, group: int) -> int:
+    """Working set one grid step stages into VMEM."""
+    bm, bn = p.block
+    pm, pn = p.pm, p.pn
+    x_tile = batch_tile * group * bn * 4
+    w_tile = group * (pm * pn * p.vals.dtype.itemsize + pm * 4 + pn * 4 + 8)
+    o_tile = batch_tile * bm * 4
+    return x_tile + w_tile + o_tile
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(23)
+    w = synthetic_rnn_weight(key, (1024, 1024))
+    x = jax.random.normal(key, (8, 1024))
+    for bm in (32, 64, 128):
+        for rate in (0.75, 0.9):
+            spec = CSBSpec(bm=bm, bn=bm, prune_rate=rate)
+            z = csb_project(w, spec)
+            rm, cm = csb_masks(w, spec)
+            p = padded_csb_from_dense(
+                np.asarray(z), bm, bm, pad_to=8,
+                row_mask=np.asarray(rm), col_mask=np.asarray(cm))
+            pad_ratio = p.padded_flops_per_mvm() / max(
+                p.true_flops_per_mvm(), 1)
+            vb = vmem_bytes(p, batch_tile=8, group=1)
+            y_ref, t_ref = timed(lambda: csb_mvm_ref(p, x))
+            y_ker, t_ker = timed(lambda: csb_matvec(p, x))
+            err = float(jnp.max(jnp.abs(y_ker - y_ref)))
+            emit(f"kernel/b{bm}/r{int(rate*100)}/pad_flop_ratio", t_ker,
+                 f"{pad_ratio:.3f}")
+            emit(f"kernel/b{bm}/r{int(rate*100)}/vmem_kb", 0.0,
+                 f"{vb/1024:.1f}")
+            emit(f"kernel/b{bm}/r{int(rate*100)}/allclose_err", t_ref,
+                 f"{err:.2e}")
+            assert err < 1e-3
+
+
+if __name__ == "__main__":
+    run()

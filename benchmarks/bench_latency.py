@@ -1,0 +1,68 @@
+"""Paper Table 3: end-to-end per-frame latency of CSB-RNN inference.
+
+Cycle model @ 200 MHz with 512 PEs (paper: 4x4 groups x 4x4 PEs plus the
+dataflow units), on the paper's benchmark layer dims with their reported
+pruning rates. Faster-than-realtime criterion: << 500 us/frame (speech).
+Also reports the macro-program occupancy (VLIW schedule) per cell type.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.cells import make_cell
+from repro.configs import PAPER_MODELS
+from repro.core import CSBSpec, csb_project
+from repro.engine.isa import compile_macro
+from repro.engine.simulator import (
+    EngineConfig, dense_latency_us, simulate_matrix,
+)
+from .common import csb_encode_weight, emit, synthetic_rnn_weight
+
+# paper-reported CSB lossless rates (Table 2-ish) used as prune targets
+RATES = {"MT1": 12.5, "SR1": 13.0, "SR2": 20.0}
+
+
+def _gate_count(cell: str) -> int:
+    return {"lstm": 4, "lstmp": 4, "gru": 3, "ligru": 2}[cell]
+
+
+def run() -> None:
+    e = EngineConfig(K=4, L=4, P=4, Q=4, freq_mhz=200.0)
+    key = jax.random.PRNGKey(11)
+    for abbr in ("MT1", "SR1", "SR2"):
+        pm = PAPER_MODELS[abbr]
+        cr = RATES[abbr]
+        rate = 1.0 - 1.0 / cr
+        total_us = 0.0
+        dense_us = 0.0
+        t0 = time.perf_counter()
+        for lcfg in pm.layers:
+            gates = _gate_count(lcfg.cell)
+            hid = lcfg.proj or lcfg.n_hidden
+            for (rows, cols) in [(lcfg.n_hidden, lcfg.n_input)] * gates + \
+                                [(lcfg.n_hidden, hid)] * gates:
+                key, sub = jax.random.split(key)
+                w = synthetic_rnn_weight(sub, (rows, cols), imbalance=1.5)
+                spec = CSBSpec(bm=32, bn=32, prune_rate=rate)
+                csb = csb_encode_weight(csb_project(w, spec), spec)
+                total_us += simulate_matrix(csb, e, "2d").latency_us
+                dense_us += dense_latency_us((rows, cols), e)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table3/{abbr}/csb_latency_us", dt, f"{total_us:.2f}")
+        emit(f"table3/{abbr}/dense_latency_us", 0.0, f"{dense_us:.2f}")
+        emit(f"table3/{abbr}/speedup", 0.0, f"{dense_us / total_us:.2f}x")
+        emit(f"table3/{abbr}/faster_than_realtime", 0.0,
+             str(total_us < 500.0))
+    # VLIW macro schedules: MVM-bound occupancy per cell type
+    for kind in ("lstm", "gru", "lstmp", "ligru"):
+        prog = compile_macro(make_cell(kind, 256, 1024, proj_dim=512))
+        occ = prog.occupancy()
+        emit(f"table3/macro/{kind}", 0.0,
+             f"slots={prog.length};csb_occ={occ['CSB-Engine']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Beyond-paper: the 40-cell roofline table from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --sweep --both-meshes``) and emits the
+per-cell roofline terms. No recompilation here — this is the reporting
+stage that EXPERIMENTS.md §Roofline is generated from.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(mesh: str = "pod16x16", tag: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) == 3 and tag is None:
+            pass
+        elif len(parts) == 4 and tag == parts[3]:
+            pass
+        else:
+            continue
+        rec = json.load(open(f))
+        if rec.get("mesh") == mesh:
+            recs.append(rec)
+    return recs
+
+
+def run() -> None:
+    recs = load_records("pod16x16")
+    if not recs:
+        emit("roofline/missing", 0.0, "run_dryrun_sweep_first")
+        return
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        rl = r["roofline"]
+        dom_t = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            dom_t * 1e6,
+            f"dom={rl['dominant']};tC={rl['t_compute']:.3g};"
+            f"tM={rl['t_memory']:.3g};tX={rl['t_collective']:.3g};"
+            f"useful={rl['useful_ratio']:.2f};"
+            f"peak={r['memory']['peak_bytes_per_device']/1e9:.1f}GB",
+        )
+    emit("roofline/summary", 0.0,
+         f"{len(ok)}_cells_ok;{len(sk)}_skipped")
+    multi = [r for r in load_records("pod2x16x16") if r["status"] == "ok"]
+    emit("roofline/multipod", 0.0, f"{len(multi)}_cells_ok_512chips")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,110 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cells import init_params, make_cell, rnn_scan
+from repro.core import (
+    CSBMatrix, CSBSpec, admm_finalize, admm_init, admm_penalty, admm_update,
+    csb_masks,
+)
+from repro.data import SeqClassifyTask
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def train_rnn_classifier(cell_kind="gru", hidden=32, vocab=16, steps=60,
+                         specs=None, seed=0, admm_every=10, rho=0.02):
+    """Small task-trained RNN used across pruning benchmarks.
+
+    Returns (cell, params, eval_acc_fn)."""
+    task = SeqClassifyTask(vocab=vocab, n_classes=4, seq_len=12, seed=seed)
+    cell = make_cell(cell_kind, vocab, hidden)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cell, key)
+    params["emb"] = jax.random.normal(key, (vocab, vocab)) * 0.3
+    params["out"] = jax.random.normal(key, (hidden, 4)) * 0.3
+
+    def loss_fn(p, toks, labels, admm_state=None):
+        xs = p["emb"][toks].transpose(1, 0, 2)
+        ys, _ = rnn_scan(cell, {k: v for k, v in p.items()
+                                if k not in ("emb", "out")}, xs)
+        logits = ys[-1] @ p["out"]
+        ll = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
+        if admm_state is not None:
+            loss = loss + admm_penalty(p, admm_state, specs)
+        return loss
+
+    admm_state = admm_init(params, specs, rho=rho) if specs else None
+    # jit once per training run: eager grad floods XLA:CPU's JIT with
+    # thousands of micro-compilations and eventually exhausts its symbol
+    # tables ("Failed to materialize symbols").
+    grad = jax.jit(jax.grad(loss_fn))
+    for step in range(steps):
+        b = task.batch(step, 32)
+        g = grad(params, jnp.asarray(b["tokens"]),
+                 jnp.asarray(b["labels"]), admm_state)
+        params = jax.tree.map(lambda w, gg: w - 0.05 * gg, params, g)
+        if specs and (step + 1) % admm_every == 0:
+            admm_state = admm_update(params, admm_state, specs)
+    if specs:
+        params = admm_finalize(params, specs)
+
+    def accuracy(p=params):
+        correct = total = 0
+        for step in range(200, 204):
+            b = task.batch(step, 64)
+            xs = p["emb"][jnp.asarray(b["tokens"])].transpose(1, 0, 2)
+            ys, _ = rnn_scan(cell, {k: v for k, v in p.items()
+                                    if k not in ("emb", "out")}, xs)
+            pred = jnp.argmax(ys[-1] @ p["out"], -1)
+            correct += int((pred == jnp.asarray(b["labels"])).sum())
+            total += 64
+        return correct / total
+
+    return cell, params, accuracy
+
+
+def csb_encode_weight(w, spec: CSBSpec) -> CSBMatrix:
+    rm, cm = csb_masks(w, spec)
+    return CSBMatrix.from_dense(np.asarray(w), spec.bm, spec.bn,
+                                np.asarray(rm), np.asarray(cm))
+
+
+def synthetic_rnn_weight(key, shape, imbalance=1.5, diag_boost=3.0):
+    """Weight with RNN-like heavy-tailed, block-imbalanced magnitudes,
+    including the diagonal-dense structure the paper singles out (§6.3.2:
+    'diagonal dense matrix exists... blocks on the matrix diagonal
+    contain significant workload'). Used where training full-size paper
+    models is infeasible offline."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = jax.random.normal(k1, shape)
+    rows = jnp.exp(jax.random.normal(k2, (shape[0], 1)) * imbalance * 0.4)
+    cols = jnp.exp(jax.random.normal(k3, (1, shape[1])) * imbalance * 0.25)
+    w = base * rows * cols
+    # diagonal band boost
+    ii = jnp.arange(shape[0])[:, None]
+    jj = jnp.arange(shape[1])[None, :]
+    band = jnp.abs(ii * shape[1] - jj * shape[0]) < 0.04 * shape[0] * shape[1]
+    return w * jnp.where(band, diag_boost, 1.0)

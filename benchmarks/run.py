@@ -1,0 +1,66 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Each benchmark runs in its OWN subprocess: XLA:CPU's JIT accumulates
+# dylib/symbol state over hundreds of compilations and eventually fails
+# with "Failed to materialize symbols" in a long-lived process; process
+# isolation keeps every table reproducible.
+import os
+import subprocess
+import sys
+import time
+
+BENCHES = [
+    ("table1", "bench_pruning_rate"),
+    ("fig10", "bench_block_size"),
+    ("table2", "bench_compare_schemes"),
+    ("fig12", "bench_utilization"),
+    ("table3", "bench_latency"),
+    ("kernel", "bench_kernel"),
+    ("roofline", "bench_roofline"),
+]
+
+
+def _run_inprocess(mod_name: str) -> None:
+    import importlib
+
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    mod.run()
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    if len(args) == 2 and args[0] == "--worker":
+        _run_inprocess(args[1])
+        return
+
+    only = args[0] if args else None
+    print("name,us_per_call,derived")
+    failures = 0
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    for name, mod in BENCHES:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--worker", mod],
+            env=env, cwd=root, capture_output=True, text=True)
+        for line in proc.stdout.splitlines():
+            if line.count(",") >= 2 and not line.startswith("name,"):
+                print(line, flush=True)
+        if proc.returncode != 0:
+            failures += 1
+            err = proc.stderr.strip().splitlines()
+            print(f"{name}/ERROR,0,{err[-1][:160] if err else 'unknown'}",
+                  flush=True)
+        print(f"{name}/total,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

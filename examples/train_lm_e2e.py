@@ -1,0 +1,76 @@
+"""End-to-end training driver: char-LM with ADMM-CSB pruning, periodic
+checkpointing + auto-resume, straggler telemetry.
+
+Default config is CPU-feasible (~2M params, 200 steps). ``--big`` selects
+a ~100M-param decoder (the deliverable shape — run it on real hardware;
+a few steps/minute on this 1-core container).
+
+Run:  PYTHONPATH=src python examples/train_lm_e2e.py [--big] [--steps N]
+      [--prune] [--ckpt DIR]
+"""
+import argparse
+
+import jax
+
+from repro.core import CSBSpec
+from repro.data import CharLMTask, lm_batch_iterator
+from repro.models import ModelConfig, forward_loss, init_params
+from repro.optim import linear_warmup_cosine
+from repro.train import TrainConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--big", action="store_true", help="~100M params")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--prune", action="store_true", help="ADMM-CSB on FFN")
+ap.add_argument("--ckpt", default=None)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=64)
+args = ap.parse_args()
+
+if args.big:
+    cfg = ModelConfig(name="charlm-100m", mixer="attn", ffn="swiglu",
+                      n_layers=12, d_model=768, n_heads=12, n_kv=4,
+                      head_dim=64, d_ff=3072, vocab=256, dtype="float32")
+else:
+    cfg = ModelConfig(name="charlm-2m", mixer="attn", ffn="swiglu",
+                      n_layers=4, d_model=128, n_heads=4, n_kv=2,
+                      head_dim=32, d_ff=512, vocab=64, dtype="float32",
+                      remat=False)
+
+print(f"model: {cfg.name}, {cfg.param_count():,} params")
+task = CharLMTask(vocab=cfg.vocab, seed=0)
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+specs = None
+if args.prune:
+    specs = jax.tree.map(lambda _: None, params)
+    specs["layers"]["ffn"]["w_gate"] = CSBSpec(bm=32, bn=32, prune_rate=0.75)
+    specs["layers"]["ffn"]["w_up"] = CSBSpec(bm=32, bn=32, prune_rate=0.75)
+    specs["layers"]["ffn"]["w_down"] = CSBSpec(bm=32, bn=32, prune_rate=0.75)
+    print("ADMM-CSB pruning enabled on FFN weights (4x)")
+
+tcfg = TrainConfig(
+    lr=3e-3 if not args.big else 6e-4,
+    steps=args.steps,
+    log_every=10,
+    ckpt_dir=args.ckpt,
+    ckpt_every=50,
+    admm_every=25 if args.prune else 0,
+    optimizer="adamw",
+)
+sched = linear_warmup_cosine(tcfg.lr, warmup=20, steps=args.steps)
+params, history = train(
+    lambda p, b: forward_loss(p, b, cfg),
+    params,
+    lm_batch_iterator(task, args.batch, args.seq),
+    tcfg,
+    lr_schedule=sched,
+    csb_specs=specs,
+)
+first = sum(h["loss"] for h in history[:10]) / max(len(history[:10]), 1)
+last = sum(h["loss"] for h in history[-10:]) / max(len(history[-10:]), 1)
+print(f"\nloss: {first:.3f} -> {last:.3f} over {len(history)} steps")
+if args.prune:
+    from repro.core import density
+    d = float(density(params["layers"]["ffn"]["w_gate"]))
+    print(f"final FFN w_gate density: {d:.3f} (target 0.25)")

@@ -1,0 +1,18 @@
+"""repro.configs — assigned architectures + the paper's Table-1 models."""
+from .registry import (
+    ARCH_IDS,
+    all_cells,
+    cell_is_runnable,
+    get_config,
+    get_reduced,
+    shape_overrides,
+    sharding_policy,
+    train_microbatches,
+)
+from .paper_models import PAPER_MODELS, PaperModel, RNNLayerCfg
+
+__all__ = [
+    "ARCH_IDS", "all_cells", "cell_is_runnable", "get_config",
+    "get_reduced", "shape_overrides", "sharding_policy",
+    "train_microbatches", "PAPER_MODELS", "PaperModel", "RNNLayerCfg",
+]

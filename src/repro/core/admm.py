@@ -1,0 +1,118 @@
+"""ADMM-based training-with-pruning (paper §2.2.2, Eqns. 2-6).
+
+The training objective is split: SGD minimizes
+``f(W) + sum_i rho/2 ||W_i - Z_i + U_i||^2``  (Eqn. 4)
+while ``Z_i = proj_S(W_i + U_i)``             (Eqn. 5/6, the CSB projection)
+and the dual update is ``U_i += W_i - Z_i``.
+
+The API is functional: an ``ADMMState`` pytree rides next to the params.
+Only parameters with an entry in the spec-tree participate; everything
+else (biases, norms, embeddings) is untouched — the paper prunes weight
+matrices only ("the bias vector is omitted").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .pruning import CSBSpec, csb_project
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ADMMState:
+    z: PyTree     # auxiliary (projected) variables, same tree as pruned params
+    u: PyTree     # scaled dual variables
+    rho: float
+
+    def tree_flatten(self):
+        return (self.z, self.u), (self.rho,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(z=leaves[0], u=leaves[1], rho=aux[0])
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, CSBSpec)
+
+
+def spec_tree_map(fn: Callable, specs: PyTree, *trees: PyTree) -> PyTree:
+    """tree_map over (spec, param, ...) treating CSBSpec as leaves."""
+    return jax.tree.map(fn, specs, *trees, is_leaf=lambda x: _is_spec(x) or x is None)
+
+
+def admm_init(params: PyTree, specs: PyTree, rho: float = 1e-3) -> ADMMState:
+    """specs mirrors ``params`` with CSBSpec leaves (None = not pruned)."""
+    z = spec_tree_map(
+        lambda s, w: csb_project(w, s) if _is_spec(s) else None, specs, params
+    )
+    u = spec_tree_map(
+        lambda s, w: jnp.zeros_like(w) if _is_spec(s) else None, specs, params
+    )
+    return ADMMState(z=z, u=u, rho=rho)
+
+
+def admm_penalty(params: PyTree, state: ADMMState, specs: PyTree) -> jax.Array:
+    """rho/2 * sum ||W - Z + U||_F^2 — add to the task loss (Eqn. 4)."""
+
+    def term(s, w, z, u):
+        if not _is_spec(s):
+            return 0.0
+        d = w.astype(jnp.float32) - z + u
+        return 0.5 * state.rho * jnp.sum(d * d)
+
+    terms = spec_tree_map(term, specs, params, state.z, state.u)
+    return jax.tree.reduce(
+        lambda a, b: a + b, terms, 0.0, is_leaf=lambda x: x is None
+    )
+
+
+def admm_update(params: PyTree, state: ADMMState, specs: PyTree) -> ADMMState:
+    """Solve the 2nd subproblem (projection) + dual ascent. Call once per
+    epoch (or every k steps)."""
+
+    def proj(s, w, u):
+        if not _is_spec(s):
+            return None
+        return csb_project(w.astype(jnp.float32) + u, s)
+
+    z = spec_tree_map(proj, specs, params, state.u)
+
+    def dual(s, w, z_, u):
+        if not _is_spec(s):
+            return None
+        return u + w.astype(jnp.float32) - z_
+
+    u = spec_tree_map(dual, specs, params, z, state.u)
+    return ADMMState(z=z, u=u, rho=state.rho)
+
+
+def admm_finalize(params: PyTree, specs: PyTree) -> PyTree:
+    """Hard-project the trained weights onto the CSB pattern (the shipped
+    model). Retraining with the mask fixed can follow."""
+
+    def fin(s, w):
+        return csb_project(w, s).astype(w.dtype) if _is_spec(s) else w
+
+    return spec_tree_map(fin, specs, params)
+
+
+def residual_norm(params: PyTree, state: ADMMState, specs: PyTree) -> jax.Array:
+    """||W - Z|| convergence diagnostic."""
+
+    def term(s, w, z):
+        if not _is_spec(s):
+            return 0.0
+        d = w.astype(jnp.float32) - z
+        return jnp.sum(d * d)
+
+    terms = spec_tree_map(term, specs, params, state.z)
+    total = jax.tree.reduce(lambda a, b: a + b, terms, 0.0,
+                            is_leaf=lambda x: x is None)
+    return jnp.sqrt(total)

@@ -1,0 +1,235 @@
+"""The CSB sparse storage format (paper Fig. 3) and its device-side
+padded twin.
+
+``CSBMatrix`` is the *faithful* format: five arrays in three groups —
+per-block kernel dims ``m{}``/``n{}``, survivor indices ``RowIdx{}``/
+``ColIdx{}`` and the concatenated kernel values ``Val{}`` in block
+row-major order (no per-block offsets: access is sequential, exactly as
+the paper stores it). It is a host-side (numpy, ragged) object used for
+storage accounting (NIO), serialization, and as the compiler's input.
+
+``PaddedCSB`` is the TPU-friendly twin: every kernel is padded to a common
+``(Pm, Pn)`` (MXU-aligned bucket) so the whole matrix becomes four dense
+arrays a Pallas kernel can tile. Padding is *explicitly accounted* —
+the scheduler (engine/schedule.py) balances on real kernel FLOPs while the
+kernel masks the pad lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass
+class CSBMatrix:
+    """Faithful CSB format (ragged, host side)."""
+
+    shape: tuple[int, int]            # original (out, in)
+    bm: int
+    bn: int
+    m: np.ndarray                     # (Br, Bc) int32 — kernel rows/block
+    n: np.ndarray                     # (Br, Bc) int32 — kernel cols/block
+    row_idx: np.ndarray               # (sum m,) int32, block row-major
+    col_idx: np.ndarray               # (sum n,) int32
+    val: np.ndarray                   # (sum m*n,) kernel values, row-major
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dense(
+        cls, w: np.ndarray, bm: int, bn: int,
+        row_mask: np.ndarray | None = None,
+        col_mask: np.ndarray | None = None,
+    ) -> "CSBMatrix":
+        """Encode a CSB-patterned dense matrix.
+
+        If masks (from ``core.pruning.csb_masks``) are not given, survivors
+        are inferred from the nonzero pattern (a row/col of a block survives
+        iff it has any nonzero).
+        """
+        w = np.asarray(w)
+        out_dim, in_dim = w.shape
+        br, bc = -(-out_dim // bm), -(-in_dim // bn)
+        wp = np.zeros((br * bm, bc * bn), w.dtype)
+        wp[:out_dim, :in_dim] = w
+        blocks = wp.reshape(br, bm, bc, bn).transpose(0, 2, 1, 3)
+
+        if row_mask is None:
+            nz = blocks != 0
+            row_mask = nz.any(axis=3)
+            col_mask = nz.any(axis=2)
+        row_mask = np.asarray(row_mask, bool)
+        col_mask = np.asarray(col_mask, bool)
+        # CSB cross-point property: a survivor row with no surviving col
+        # stores nothing; normalize so m,n are consistent with storage.
+        has_any = row_mask.any(-1) & col_mask.any(-1)        # (Br, Bc)
+        row_mask = row_mask & has_any[..., None]
+        col_mask = col_mask & has_any[..., None]
+
+        m = row_mask.sum(-1).astype(np.int32)
+        n = col_mask.sum(-1).astype(np.int32)
+        rows, cols, vals = [], [], []
+        for i in range(br):
+            for j in range(bc):
+                r = np.nonzero(row_mask[i, j])[0].astype(np.int32)
+                c = np.nonzero(col_mask[i, j])[0].astype(np.int32)
+                rows.append(r)
+                cols.append(c)
+                vals.append(blocks[i, j][np.ix_(r, c)].reshape(-1))
+        return cls(
+            shape=(out_dim, in_dim), bm=bm, bn=bn, m=m, n=n,
+            row_idx=np.concatenate(rows) if rows else np.zeros(0, np.int32),
+            col_idx=np.concatenate(cols) if cols else np.zeros(0, np.int32),
+            val=np.concatenate(vals) if vals else np.zeros(0, w.dtype),
+        )
+
+    # -- decode ------------------------------------------------------------
+    def to_dense(self) -> np.ndarray:
+        br, bc = self.m.shape
+        out = np.zeros((br * self.bm, bc * self.bn), self.val.dtype)
+        ro = co = vo = 0
+        for i in range(br):
+            for j in range(bc):
+                mi, ni = int(self.m[i, j]), int(self.n[i, j])
+                r = self.row_idx[ro: ro + mi]
+                c = self.col_idx[co: co + ni]
+                k = self.val[vo: vo + mi * ni].reshape(mi, ni)
+                out[np.ix_(i * self.bm + r, j * self.bn + c)] = k
+                ro, co, vo = ro + mi, co + ni, vo + mi * ni
+        return out[: self.shape[0], : self.shape[1]]
+
+    # -- storage accounting (Fig. 10b) --------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int((self.m.astype(np.int64) * self.n).sum())
+
+    @property
+    def index_count(self) -> int:
+        """Row + col survivor indices (+2 counts per block)."""
+        return int(self.m.sum() + self.n.sum() + 2 * self.m.size)
+
+    def nio(self) -> float:
+        """Normalized Index Overhead = index entries / weight entries."""
+        return self.index_count / max(self.nnz, 1)
+
+    @staticmethod
+    def csr_nio(nnz: int, rows: int) -> float:
+        """CSR overhead of a non-structured matrix: 1 col idx per nnz +
+        row pointers — the paper's >100% comparison point."""
+        return (nnz + rows + 1) / max(nnz, 1)
+
+    def compression_ratio(self) -> float:
+        return (self.shape[0] * self.shape[1]) / max(self.nnz, 1)
+
+    # -- workload view for the engine/compiler ------------------------------
+    def block_workloads(self) -> np.ndarray:
+        """(Br, Bc) multiply-accumulate counts — the scheduler's input."""
+        return (self.m.astype(np.int64) * self.n.astype(np.int64))
+
+
+def _register_pytree(cls):
+    fields = [f.name for f in dataclasses.fields(cls) if f.metadata.get("leaf")]
+    aux = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("leaf")]
+
+    def flatten(obj):
+        return [getattr(obj, k) for k in fields], tuple(
+            getattr(obj, k) for k in aux
+        )
+
+    def unflatten(auxv, leaves):
+        kw = dict(zip(fields, leaves))
+        kw.update(dict(zip(aux, auxv)))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def _leaf(**kw):
+    return dataclasses.field(metadata={"leaf": True}, **kw)
+
+
+@_register_pytree
+@dataclasses.dataclass
+class PaddedCSB:
+    """Device-side CSB: kernels padded to a common (Pm, Pn) bucket.
+
+    vals:     (NB, Pm, Pn)  kernel values (pad lanes zero)
+    row_idx:  (NB, Pm) int32  within-block survivor row (pad -> 0)
+    col_idx:  (NB, Pn) int32
+    m, n:     (NB,) int32   true kernel dims
+    Blocks are row-major over the (Br, Bc) grid.
+    """
+
+    vals: jax.Array = _leaf()
+    row_idx: jax.Array = _leaf()
+    col_idx: jax.Array = _leaf()
+    m: jax.Array = _leaf()
+    n: jax.Array = _leaf()
+    shape: tuple[int, int] = dataclasses.field(default=(0, 0))
+    grid: tuple[int, int] = dataclasses.field(default=(0, 0))
+    block: tuple[int, int] = dataclasses.field(default=(0, 0))
+
+    @property
+    def pm(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def pn(self) -> int:
+        return self.vals.shape[2]
+
+    @classmethod
+    def from_csb(
+        cls, csb: CSBMatrix, pad_to: int = 8, dtype=jnp.float32
+    ) -> "PaddedCSB":
+        br, bc = csb.m.shape
+        nb = br * bc
+        pm = max(_round_up(int(csb.m.max(initial=0)), pad_to), pad_to)
+        pn = max(_round_up(int(csb.n.max(initial=0)), pad_to), pad_to)
+        vals = np.zeros((nb, pm, pn), np.float32)
+        ridx = np.zeros((nb, pm), np.int32)
+        cidx = np.zeros((nb, pn), np.int32)
+        ro = co = vo = 0
+        b = 0
+        for i in range(br):
+            for j in range(bc):
+                mi, ni = int(csb.m[i, j]), int(csb.n[i, j])
+                ridx[b, :mi] = csb.row_idx[ro: ro + mi]
+                cidx[b, :ni] = csb.col_idx[co: co + ni]
+                vals[b, :mi, :ni] = csb.val[vo: vo + mi * ni].reshape(mi, ni)
+                ro, co, vo = ro + mi, co + ni, vo + mi * ni
+                b += 1
+        return cls(
+            vals=jnp.asarray(vals, dtype),
+            row_idx=jnp.asarray(ridx),
+            col_idx=jnp.asarray(cidx),
+            m=jnp.asarray(csb.m.reshape(-1)),
+            n=jnp.asarray(csb.n.reshape(-1)),
+            shape=csb.shape, grid=(br, bc), block=(csb.bm, csb.bn),
+        )
+
+    def padded_flops_per_mvm(self) -> int:
+        """2 * NB * Pm * Pn — what the padded kernel actually executes."""
+        return 2 * int(self.vals.shape[0]) * self.pm * self.pn
+
+    def true_flops_per_mvm(self) -> int:
+        return int(2 * jnp.sum(self.m.astype(jnp.int64) * self.n))
+
+
+def padded_csb_from_dense(
+    w, bm: int, bn: int, pad_to: int = 8, dtype=jnp.float32,
+    row_mask=None, col_mask=None,
+) -> PaddedCSB:
+    csb = CSBMatrix.from_dense(
+        np.asarray(w), bm, bn,
+        None if row_mask is None else np.asarray(row_mask),
+        None if col_mask is None else np.asarray(col_mask),
+    )
+    return PaddedCSB.from_csb(csb, pad_to=pad_to, dtype=dtype)

@@ -1,0 +1,177 @@
+"""CSB projection (Algorithm 1's RowPrune/ColumnPrune) — the Euclidean
+projection onto the CSB-constrained set S (Eqn. 6 of the paper).
+
+Conventions
+-----------
+A weight matrix has shape ``(out_dim, in_dim)``; it is tiled into
+``Br x Bc`` blocks of ``(bm, bn)`` (zero-padded when not divisible, as the
+paper does for SR4). Within each *block-column* a fraction of rows is
+pruned globally by l2-norm (RowPrune), then within each *block-row* a
+fraction of columns (ColumnPrune). Because the thresholds are global per
+block-column/-row, the per-block kernel sizes ``m(i,j) x n(i,j)`` vary —
+the "natural unbalanced sparsity" the paper's engine must then balance.
+
+Per Algorithm 1 both passes use rate ``1 - sqrt(1 - prune_rate)`` so the
+combined kept fraction is ``~ 1 - prune_rate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CSBSpec:
+    """Pruning spec for one weight matrix."""
+
+    bm: int = 32          # block rows (output-neuron slice)
+    bn: int = 32          # block cols (input-neuron slice)
+    prune_rate: float = 0.5  # fraction of weights REMOVED, in [0, 1)
+
+    @property
+    def keep_fraction(self) -> float:
+        return 1.0 - self.prune_rate
+
+    @property
+    def compression_ratio(self) -> float:
+        """Paper's headline 'pruning rate' (e.g. 25x) = orig/pruned."""
+        return 1.0 / max(self.keep_fraction, 1e-12)
+
+    def with_rate(self, prune_rate: float) -> "CSBSpec":
+        return dataclasses.replace(self, prune_rate=float(prune_rate))
+
+
+def _grid(shape: tuple[int, int], bm: int, bn: int) -> tuple[int, int]:
+    out_dim, in_dim = shape
+    return -(-out_dim // bm), -(-in_dim // bn)
+
+
+def pad_to_blocks(w: jax.Array, bm: int, bn: int) -> jax.Array:
+    out_dim, in_dim = w.shape
+    br, bc = _grid(w.shape, bm, bn)
+    return jnp.pad(w, ((0, br * bm - out_dim), (0, bc * bn - in_dim)))
+
+
+def to_blocks(w: jax.Array, bm: int, bn: int) -> jax.Array:
+    """(out, in) -> (Br, Bc, bm, bn)."""
+    br, bc = _grid(w.shape, bm, bn)
+    wp = pad_to_blocks(w, bm, bn)
+    return wp.reshape(br, bm, bc, bn).transpose(0, 2, 1, 3)
+
+
+def from_blocks(blocks: jax.Array, shape: tuple[int, int]) -> jax.Array:
+    br, bc, bm, bn = blocks.shape
+    wp = blocks.transpose(0, 2, 1, 3).reshape(br * bm, bc * bn)
+    return wp[: shape[0], : shape[1]]
+
+
+def _topk_mask(scores: jax.Array, keep: int) -> jax.Array:
+    """Exact-count keep mask of the ``keep`` largest entries along axis -1.
+
+    Argsort-based so ties (e.g. zero padding) never inflate the kept count.
+    """
+    n = scores.shape[-1]
+    order = jnp.argsort(jnp.argsort(scores, axis=-1), axis=-1)  # rank, asc
+    return order >= (n - keep)
+
+
+def csb_masks(
+    w: jax.Array, spec: CSBSpec
+) -> tuple[jax.Array, jax.Array]:
+    """Compute per-block row/col keep masks for the CSB projection.
+
+    Returns ``row_mask (Br, Bc, bm)`` and ``col_mask (Br, Bc, bn)`` (bool).
+    Rank-3 inputs (stacked layers, leading L axis) are vmapped.
+    """
+    if w.ndim == 3:
+        return jax.vmap(lambda x: csb_masks(x, spec))(w)
+    bm, bn = spec.bm, spec.bn
+    blocks = to_blocks(w, bm, bn)           # (Br, Bc, bm, bn)
+    br, bc = blocks.shape[:2]
+    q = 1.0 - math.sqrt(max(1.0 - spec.prune_rate, 0.0))
+
+    # --- RowPrune: per block-column, over all Br*bm row slices ----------
+    rn = jnp.sum(blocks * blocks, axis=3)   # (Br, Bc, bm)
+    keep_r = max(int(round((1.0 - q) * br * bm)), 1)
+    rn_col = rn.transpose(1, 0, 2).reshape(bc, br * bm)
+    row_mask = _topk_mask(rn_col, keep_r)
+    row_mask = row_mask.reshape(bc, br, bm).transpose(1, 0, 2)  # (Br,Bc,bm)
+
+    # --- ColumnPrune: per block-row, on the row-masked blocks -----------
+    masked = blocks * row_mask[..., :, None]
+    cn = jnp.sum(masked * masked, axis=2)   # (Br, Bc, bn)
+    keep_c = max(int(round((1.0 - q) * bc * bn)), 1)
+    cn_row = cn.reshape(br, bc * bn)
+    col_mask = _topk_mask(cn_row, keep_c).reshape(br, bc, bn)
+
+    return row_mask, col_mask
+
+
+def element_mask(
+    shape: tuple[int, int], spec: CSBSpec,
+    row_mask: jax.Array, col_mask: jax.Array,
+) -> jax.Array:
+    """Expand block row/col masks to a dense (out, in) element mask."""
+    full = row_mask[..., :, None] & col_mask[..., None, :]
+    return from_blocks(full, shape)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def csb_project(w: jax.Array, spec: CSBSpec) -> jax.Array:
+    """Project ``w`` onto the CSB pattern: Z = proj_S(w) (Eqn. 6).
+
+    Rank-3 inputs (stacked layers) are projected per-layer via vmap."""
+    if w.ndim == 3:
+        return jax.vmap(lambda x: csb_project(x, spec))(w)
+    row_mask, col_mask = csb_masks(w, spec)
+    return w * element_mask(w.shape, spec, row_mask, col_mask).astype(w.dtype)
+
+
+def kernel_sizes(
+    w: jax.Array, spec: CSBSpec
+) -> tuple[jax.Array, jax.Array]:
+    """Per-block kernel dims ``m (Br,Bc)``, ``n (Br,Bc)`` of a CSB matrix."""
+    row_mask, col_mask = csb_masks(w, spec)
+    return row_mask.sum(-1), col_mask.sum(-1)
+
+
+def density(w: jax.Array) -> jax.Array:
+    return jnp.mean((w != 0).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Baselines the paper compares against (Table 2) — implemented for the
+# benchmark harness, same projection API.
+# ---------------------------------------------------------------------------
+
+def magnitude_project(w: jax.Array, prune_rate: float) -> jax.Array:
+    """Non-structured (random-sparsity) magnitude pruning [Han et al.]."""
+    flat = jnp.abs(w).reshape(-1)
+    keep = max(int(round((1.0 - prune_rate) * flat.size)), 1)
+    mask = _topk_mask(flat, keep).reshape(w.shape)
+    return w * mask.astype(w.dtype)
+
+
+def bank_balanced_project(
+    w: jax.Array, prune_rate: float, bank: int = 64
+) -> jax.Array:
+    """Bank-balanced sparsity [Cao et al. FPGA'19]: equal nnz per bank
+    (contiguous segments of each row)."""
+    out_dim, in_dim = w.shape
+    nb = -(-in_dim // bank)
+    wp = jnp.pad(w, ((0, 0), (0, nb * bank - in_dim)))
+    banks = jnp.abs(wp).reshape(out_dim, nb, bank)
+    keep = max(int(round((1.0 - prune_rate) * bank)), 1)
+    mask = _topk_mask(banks, keep).reshape(out_dim, nb * bank)
+    return w * mask[:, :in_dim].astype(w.dtype)
+
+
+def row_column_project(w: jax.Array, prune_rate: float) -> jax.Array:
+    """Coarse structured pruning [Wen et al. ISS]: whole rows/cols of the
+    *entire matrix* (CSB with a single block)."""
+    spec = CSBSpec(bm=w.shape[0], bn=w.shape[1], prune_rate=prune_rate)
+    return csb_project(w, spec)

@@ -1,0 +1,22 @@
+"""repro.data — deterministic synthetic data pipeline.
+
+The container is offline: PTB/TIMIT/… are not redistributable here, so
+the paper's tasks are stood in for by synthetic generators with the same
+tensor interfaces (sequence classification / char-LM / regression). The
+pipeline itself is production-shaped: deterministic per-(seed, step)
+batches (restart-safe — a resumed job regenerates the identical stream),
+a background prefetcher (straggler absorption), and per-dp-shard slicing.
+"""
+from .synthetic import (
+    AddingTask,
+    CharLMTask,
+    CopyTask,
+    SeqClassifyTask,
+    lm_batch_iterator,
+)
+from .pipeline import Prefetcher, sharded_batches
+
+__all__ = [
+    "CharLMTask", "CopyTask", "AddingTask", "SeqClassifyTask",
+    "lm_batch_iterator", "Prefetcher", "sharded_batches",
+]

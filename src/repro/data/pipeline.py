@@ -1,0 +1,70 @@
+"""Pull-based prefetching pipeline.
+
+``Prefetcher`` runs the generator in a daemon thread with a bounded
+queue — the classic straggler absorber: a slow host-side batch
+generation step doesn't stall the accelerator as long as the queue has
+depth. ``sharded_batches`` device_puts each numpy batch with the dp
+sharding so jit consumes committed global arrays (no implicit transfer
+inside the step).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+class Prefetcher:
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+
+        def run():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # surface in consumer
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def sharded_batches(it: Iterator[dict], mesh: Mesh | None,
+                    specs: dict[str, PartitionSpec] | None,
+                    prefetch: int = 2):
+    """Wrap a (step, batch) iterator: device_put with dp sharding."""
+
+    def put(batch: dict) -> dict:
+        if mesh is None or specs is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        out = {}
+        for k, v in batch.items():
+            spec = specs.get(k, PartitionSpec())
+            out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+        return out
+
+    def gen():
+        for step, batch in it:
+            yield step, put(batch)
+
+    return Prefetcher(gen(), depth=prefetch)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for CSB matrix-vector/matrix multiplication.
+
+Computes ``Y = X @ W^T`` where ``W`` is a CSB-pruned matrix held in the
+padded device format (`PaddedCSB`): per block a dense kernel matrix
+``(Pm, Pn)`` plus within-block survivor indices.
+
+TPU adaptation of the paper's CSB-Engine (DESIGN.md §2):
+
+* The FPGA engine gathers input neurons by ColIdx through a buffer port and
+  scatter-accumulates by RowIdx. TPUs have no cheap random access out of
+  VMEM, so both indirections become **one-hot matmuls** that run on the
+  MXU: ``gather = X_blk @ C^T`` with ``C[l, :] = onehot(col_idx[l])`` and
+  ``scatter = Yk @ R`` with ``R[k, :] = onehot(row_idx[k])``.
+* inner-block parallelism  -> the (TB, Pn) x (Pn, Pm) kernel matmul;
+* inter-block parallelism  -> the grid over block-rows x batch tiles, with
+  the block-column dimension folded into a sequential accumulation axis
+  (the standard TPU reduction-in-grid pattern);
+* the WeightBuffer         -> BlockSpec-staged VMEM tiles.
+
+Workload balance across grid cells is the *scheduler's* job
+(engine/schedule.py); this kernel executes whatever block layout it is
+handed, masking pad lanes so padded FLOPs never corrupt results.
+
+Grid: ``(batch_tiles, Br, Bc/G)`` — the last axis accumulates into the
+output tile (minor-most, so the compiler keeps the accumulator resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.csb_format import PaddedCSB
+
+
+def _kernel(x_ref, vals_ref, ridx_ref, cidx_ref, m_ref, n_ref, o_ref,
+            *, bm: int, bn: int, group: int):
+    """One grid step: TB batch rows x one block-row x G blocks."""
+    jc = pl.program_id(2)
+
+    @pl.when(jc == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pm = vals_ref.shape[-2]
+    pn = vals_ref.shape[-1]
+    acc = o_ref[...]
+    for g in range(group):
+        # ---- gather input neurons by ColIdx (one-hot matmul on MXU) ----
+        xs = x_ref[:, g * bn:(g + 1) * bn].astype(jnp.float32)   # (TB, bn)
+        cidx = cidx_ref[0, g]                                    # (Pn,)
+        n_valid = n_ref[0, g]
+        lane = jax.lax.broadcasted_iota(jnp.int32, (pn, bn), 1)
+        coh = jnp.where(
+            (cidx[:, None] == lane)
+            & (jax.lax.broadcasted_iota(jnp.int32, (pn, bn), 0)
+               < n_valid),
+            1.0, 0.0)                                            # (Pn, bn)
+        xg = jax.lax.dot_general(
+            xs, coh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                  # (TB, Pn)
+
+        # ---- dense kernel-matrix MVM (the paper's inner-block work) ----
+        kmat = vals_ref[0, g].astype(jnp.float32)                # (Pm, Pn)
+        yk = jax.lax.dot_general(
+            xg, kmat, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                  # (TB, Pm)
+
+        # ---- scatter to output rows by RowIdx --------------------------
+        ridx = ridx_ref[0, g]                                    # (Pm,)
+        m_valid = m_ref[0, g]
+        rlane = jax.lax.broadcasted_iota(jnp.int32, (pm, bm), 1)
+        roh = jnp.where(
+            (ridx[:, None] == rlane)
+            & (jax.lax.broadcasted_iota(jnp.int32, (pm, bm), 0)
+               < m_valid),
+            1.0, 0.0)                                            # (Pm, bm)
+        acc = acc + jax.lax.dot_general(
+            yk, roh, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                  # (TB, bm)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid", "block", "batch_tile", "group", "interpret"),
+)
+def csb_mvm_pallas(
+    vals: jax.Array,      # (NB, Pm, Pn)
+    row_idx: jax.Array,   # (NB, Pm)
+    col_idx: jax.Array,   # (NB, Pn)
+    m: jax.Array,         # (NB,)
+    n: jax.Array,         # (NB,)
+    x: jax.Array,         # (B, Bc*bn) — already padded to the block grid
+    *,
+    grid: tuple[int, int],
+    block: tuple[int, int],
+    batch_tile: int = 128,
+    group: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (B, Br*bm) fp32. ``group`` = blocks fused per grid step."""
+    br, bc = grid
+    bm, bn = block
+    nb, pm, pn = vals.shape
+    assert nb == br * bc, (nb, grid)
+    assert bc % group == 0, (bc, group)
+    b = x.shape[0]
+    assert b % batch_tile == 0, (b, batch_tile)
+
+    vals4 = vals.reshape(br, bc, pm, pn)
+    ridx3 = row_idx.reshape(br, bc, pm)
+    cidx3 = col_idx.reshape(br, bc, pn)
+    m2 = m.reshape(br, bc)
+    n2 = n.reshape(br, bc)
+
+    gsteps = bc // group
+    out = pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bn=bn, group=group),
+        grid=(b // batch_tile, br, gsteps),
+        in_specs=[
+            pl.BlockSpec((batch_tile, group * bn),
+                         lambda t, i, j: (t, j)),
+            pl.BlockSpec((1, group, pm, pn), lambda t, i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, group, pm), lambda t, i, j: (i, j, 0)),
+            pl.BlockSpec((1, group, pn), lambda t, i, j: (i, j, 0)),
+            pl.BlockSpec((1, group), lambda t, i, j: (i, j)),
+            pl.BlockSpec((1, group), lambda t, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, bm), lambda t, i, j: (t, i)),
+        out_shape=jax.ShapeDtypeStruct((b, br * bm), jnp.float32),
+        interpret=interpret,
+    )(x, vals4, ridx3, cidx3, m2, n2)
+    return out

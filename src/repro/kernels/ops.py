@@ -1,0 +1,58 @@
+"""Public jit'd wrappers around the Pallas CSB kernels.
+
+``csb_matvec(p, x)`` accepts any leading batch shape (including none — a
+single vector, the paper's MVM case), pads batch/feature dims to the
+kernel's tile grid and strips the padding off the result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csb_format import PaddedCSB
+from .csb_mvm import csb_mvm_pallas
+
+# The container is CPU-only: interpret mode executes the kernel body in
+# Python for correctness. On a real TPU runtime set interpret=False.
+_DEFAULT_INTERPRET = True
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "group", "interpret"))
+def _run(p: PaddedCSB, x2: jax.Array, batch_tile: int, group: int,
+         interpret: bool) -> jax.Array:
+    br, bc = p.grid
+    bm, bn = p.block
+    b, in_dim = x2.shape
+    bp = _round_up(max(b, 1), batch_tile)
+    xp = jnp.pad(x2, ((0, bp - b), (0, bc * bn - in_dim)))
+    y = csb_mvm_pallas(
+        p.vals, p.row_idx, p.col_idx, p.m, p.n, xp,
+        grid=p.grid, block=p.block, batch_tile=batch_tile, group=group,
+        interpret=interpret,
+    )
+    return y[:b, : p.shape[0]]
+
+
+def csb_matvec(
+    p: PaddedCSB,
+    x: jax.Array,
+    *,
+    batch_tile: int = 8,
+    group: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = x @ W^T for CSB W;  x: (..., in_dim) -> (..., out_dim) fp32."""
+    if interpret is None:
+        interpret = _DEFAULT_INTERPRET
+    if group is None:
+        group = 1
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _run(p, x2, batch_tile, group, interpret)
+    return y.reshape(*batch_shape, p.shape[0])

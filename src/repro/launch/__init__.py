@@ -1,0 +1,10 @@
+"""repro.launch — mesh, dry-run, roofline, training entrypoints.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — it sets XLA_FLAGS
+for 512 host devices at import time and must only be imported as the
+process entrypoint (``python -m repro.launch.dryrun``).
+"""
+from .mesh import make_production_mesh, make_test_mesh
+from . import roofline
+
+__all__ = ["make_production_mesh", "make_test_mesh", "roofline"]

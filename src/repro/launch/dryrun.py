@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full step function (train_step /
+prefill_step / serve_step), pins param/opt/batch/cache shardings, lowers
+against ShapeDtypeStruct inputs (zero allocation), compiles for the
+production mesh, and records:
+
+  - memory_analysis()      (proves the program fits per device)
+  - cost_analysis()        (per-device FLOPs / bytes for the roofline)
+  - collective operand bytes parsed from the optimized HLO
+  - the derived three-term roofline
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --sweep            # all runnable cells
+  python -m repro.launch.dryrun --list             # show the 40-cell grid
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_IDS, all_cells, cell_is_runnable, get_config, shape_overrides,
+    sharding_policy, train_microbatches,
+)
+from repro.dist import (
+    activation_rules, batch_specs, cache_specs, param_specs, use_rules,
+)
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Roofline, loop_trip_counts, model_flops, parse_collectives, roofline,
+)
+from repro.launch.shardspec import opt_state_specs, to_named
+from repro.models import abstract_params, forward_loss, prefill
+from repro.models import decode_step as model_decode_step
+from repro.models.config import SHAPES
+from repro.optim import clip_by_global_norm, get_optimizer
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "benchmarks", "results", "dryrun")
+
+
+def build_cell(arch: str, shape_name: str, mesh, extra_over=None,
+               policy=None, micro: int | None = None,
+               accum_dtype=None):
+    """Returns (step_fn, args, in_shardings, donate, rules, cfg)."""
+    over = shape_overrides(arch, shape_name)
+    over.update(extra_over or {})
+    cfg = dataclasses.replace(get_config(arch), **over)
+    shp = SHAPES[shape_name]
+    policy = policy or sharding_policy(arch, shape_name)
+    rules = activation_rules(cfg, mesh, policy,
+                             global_batch=shp.global_batch)
+
+    aparams = abstract_params(cfg)
+    pspecs = param_specs(cfg, aparams, mesh, policy)
+    psh = to_named(mesh, pspecs)
+    bspec = batch_specs(cfg, shp.kind, mesh, global_batch=shp.global_batch)
+    window = cfg.window
+
+    if shp.kind == "train":
+        micro = micro or train_microbatches(arch)
+        dp_total = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp_total *= mesh.shape[ax]
+        micro = max(1, min(micro, shp.global_batch // dp_total))
+        # FSDP cells accumulate grads in bf16 (halves the accumulation
+        # buffer; grads are bf16 anyway — §Perf iter log)
+        if accum_dtype is None:
+            accum_dtype = jnp.bfloat16 if policy.fsdp else jnp.float32
+        opt_name = "adafactor" if cfg.param_count() > 1e11 else "adamw"
+        opt = get_optimizer(opt_name)
+        astate = jax.eval_shape(opt.init, aparams)
+        osh = to_named(mesh, opt_state_specs(opt, pspecs))
+
+        def constrain(tree):
+            return jax.tree.map(
+                lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
+                tree, psh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p, b):
+                return forward_loss(p, b, cfg, window=window)
+
+            if micro > 1:
+                def micro_step(carry, mb):
+                    gsum, lsum = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    g = constrain(g)
+                    gsum = jax.tree.map(
+                        lambda a, b_: a + b_.astype(a.dtype), gsum, g)
+                    return (constrain(gsum), lsum + l), None
+
+                g0 = constrain(jax.tree.map(
+                    lambda pp: jnp.zeros(pp.shape, accum_dtype), params))
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(
+                        micro, x.shape[0] // micro, *x.shape[1:]), batch)
+                (gsum, lsum), _ = jax.lax.scan(micro_step, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / micro, gsum)
+                loss = lsum / micro
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                grads = constrain(grads)
+            grads = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, opt_state, params,
+                                           jnp.asarray(3e-4), 0.1)
+            return params, opt_state, loss
+
+        batch = input_specs(cfg, shp)
+        bsh = {k: NamedSharding(mesh, bspec.get(k, P()))
+               for k in batch}
+        args = (aparams, astate, batch)
+        in_sh = (psh, osh, bsh)
+        return train_step, args, in_sh, (0, 1), rules, cfg
+
+    if shp.kind == "prefill":
+        def prefill_step(params, batch):
+            return prefill(params, batch, cfg, window=window)
+
+        batch = input_specs(cfg, shp)
+        bsh = {k: NamedSharding(mesh, bspec.get(k, P())) for k in batch}
+        return prefill_step, (aparams, batch), (psh, bsh), (), rules, cfg
+
+    # decode
+    ins = input_specs(cfg, shp)
+    csh = to_named(mesh, cache_specs(cfg, ins["cache"], mesh, policy))
+    tok_sh = NamedSharding(mesh, bspec["tokens"])
+
+    def serve_step(params, cache, tokens, pos):
+        return model_decode_step(params, cache, tokens, pos, cfg)
+
+    args = (aparams, ins["cache"], ins["tokens"], ins["pos"])
+    in_sh = (psh, csh, tok_sh, NamedSharding(mesh, P()))
+    return serve_step, args, in_sh, (1,), rules, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             extra_over=None, policy=None, save: bool = True,
+             tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    shp = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shp.kind}
+    if not cell_is_runnable(arch, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         "this arch is pure full-attention (DESIGN.md §4)")
+        if save:
+            _save(rec, tag)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    step_fn, args, in_sh, donate, rules, cfg = build_cell(
+        arch, shape_name, mesh, extra_over, policy)
+    try:
+        with use_rules(rules):
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # loop-aware analysis (XLA's cost_analysis counts scan bodies once)
+        from repro.launch.hlo_cost import analyze as hlo_analyze
+        from repro.launch.hlo_cost import f32_convert_overhead
+        lc = hlo_analyze(hlo)
+        cvt = f32_convert_overhead(hlo)
+        flops = float(lc.flops)
+        bts = float(lc.bytes)
+        mf = model_flops(cfg, shp, chips)
+        rl = roofline(flops, bts, lc.collective_total, mf)
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_bytes_per_device": int(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+                # XLA:CPU lowers bf16 dots via hoisted f32 converts that a
+                # TPU build does not allocate; subtracting their (upper
+                # bound) size gives the TPU-adjusted estimate.
+                "cpu_f32_convert_bytes": int(cvt),
+                "peak_bytes_tpu_estimate": int(max(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+                    - cvt,
+                    mem.argument_size_in_bytes)),
+            },
+            "cost": {"flops_per_device": flops,
+                     "bytes_per_device": bts,
+                     "xla_flops_unrolled_once": float(
+                         cost.get("flops", 0.0)),
+                     "xla_bytes_unrolled_once": float(
+                         cost.get("bytes accessed", 0.0))},
+            "collectives": {
+                "bytes_by_op": lc.coll_bytes,
+                "count_by_op": lc.coll_count,
+                "total_bytes": lc.collective_total,
+            },
+            "roofline": rl.as_dict(),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        })
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        _save(rec, tag)
+    return rec
+
+
+def _save(rec: dict, tag: str = "") -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(
+        RESULTS_DIR,
+        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            run = "RUN " if cell_is_runnable(a, s) else "SKIP"
+            print(f"{run} {a:24s} {s}")
+        return 0
+
+    if args.sweep:
+        ok = err = skip = 0
+        for a, s in all_cells():
+            for mp in ([False, True] if args.both_meshes
+                       else [args.multi_pod]):
+                rec = run_cell(a, s, mp)
+                st = rec["status"]
+                ok += st == "ok"
+                err += st == "error"
+                skip += st == "skipped"
+                extra = ""
+                if st == "ok":
+                    extra = (f"compile {rec['compile_s']}s "
+                             f"dom={rec['roofline']['dominant']}")
+                elif st == "error":
+                    extra = rec["error"][:120]
+                print(f"[{st:7s}] {a} {s} "
+                      f"{'multi' if mp else 'single'} {extra}",
+                      flush=True)
+        print(f"sweep done: {ok} ok, {skip} skipped, {err} errors")
+        return 1 if err else 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --sweep/--list)")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    code = 0
+    for mp in meshes:
+        rec = run_cell(args.arch, args.shape, mp)
+        print(json.dumps(
+            {k: v for k, v in rec.items() if k != "traceback"}, indent=1))
+        if rec["status"] == "error":
+            print(rec.get("traceback", ""), file=sys.stderr)
+            code = 1
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,295 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — a
+program built around ``lax.scan`` (layers, attention chunks, microbatches)
+under-reports FLOPs by the trip count. This module re-derives FLOPs /
+HBM bytes / collective bytes from the optimized HLO text, multiplying
+loop bodies by their ``known_trip_count`` backend annotation.
+
+Accounting model (mirrors XLA's HloCostAnalysis):
+  - dot: 2 * prod(output dims) * prod(lhs contracting dims)
+  - elementwise arithmetic/transcendental: 1 flop per output element
+  - reduce: 1 flop per *input* element
+  - bytes: per top-level op, operand bytes + output bytes; fusion
+    internals contribute flops but NOT bytes (they live in registers/VMEM)
+  - while: body+condition cost x trip count
+  - collectives: operand bytes, x trip count when loop-resident;
+    async -start/-done pairs counted once
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "negate",
+    "abs", "floor", "ceil", "sign", "cosine", "sine", "logistic",
+    "exponential-minus-one", "log-plus-one", "atan2", "remainder",
+    "and", "or", "xor", "not", "select", "clamp", "compare",
+}
+
+_ZERO_BYTE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(([^)]*)\)(.*)$")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_NAME_REF_RE = re.compile(r"%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"?n\\?"?:\\?"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_info(type_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) of a possibly-tuple type string."""
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict | None = None
+    coll_count: dict | None = None
+
+    def __post_init__(self):
+        self.coll_bytes = self.coll_bytes or {}
+        self.coll_count = self.coll_count or {}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: str
+    attrs: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: list[_Op] | None = None
+        cur_name = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur_name = hdr.group(1)
+                cur = []
+                self.computations[cur_name] = cur
+                if line.startswith("ENTRY"):
+                    self.entry = cur_name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                cur.append(_Op(*m.groups()))
+        if self.entry is None and self.computations:
+            # fall back: the last computation is usually the entry
+            self.entry = list(self.computations)[-1]
+
+    # -- per-op costs --------------------------------------------------------
+    def _op_flops(self, op: _Op) -> float:
+        out_elems, _ = _shape_info(op.type_str)
+        if op.opcode == "dot":
+            cm = _CONTRACT_RE.search(op.attrs)
+            # resolve lhs shape: first operand
+            first = _NAME_REF_RE.search(op.operands)
+            contract = 1
+            if cm and first:
+                lhs_dims_idx = [int(d) for d in cm.group(1).split(",") if d]
+                lhs_shape = self._operand_dims.get(first.group(1), [])
+                for i in lhs_dims_idx:
+                    if i < len(lhs_shape):
+                        contract *= lhs_shape[i]
+            return 2.0 * out_elems * contract
+        if op.opcode == "convolution":
+            return 2.0 * out_elems  # no convs in this codebase; nominal
+        if op.opcode in _ELEMENTWISE:
+            return float(out_elems)
+        if op.opcode == "reduce":
+            # ~1 flop per input element
+            first = _NAME_REF_RE.search(op.operands)
+            if first:
+                dims = self._operand_dims.get(first.group(1), [])
+                n = 1
+                for d in dims:
+                    n *= d
+                return float(n)
+            return float(out_elems)
+        return 0.0
+
+    def _op_bytes(self, op: _Op, defs: dict[str, int]) -> float:
+        if op.opcode in _ZERO_BYTE_OPS:
+            return 0.0
+        _, out_bytes = _shape_info(op.type_str)
+        # slicing reads only what it produces — charging the full operand
+        # would bill a scanned weight stack once PER LAYER (9.7 GB of
+        # phantom traffic on mamba2 decode; §Perf iter log).
+        if op.opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_bytes
+        if op.opcode in ("dynamic-update-slice", "scatter"):
+            ops_ = _NAME_REF_RE.findall(op.operands)
+            upd = defs.get(ops_[1], out_bytes) if len(ops_) > 1 else out_bytes
+            return 2.0 * upd
+        total = float(out_bytes)
+        for m in _NAME_REF_RE.finditer(op.operands):
+            total += defs.get(m.group(1), 0)
+        return total
+
+    # -- computation walk ----------------------------------------------------
+    def cost_of(self, comp_name: str, count_bytes: bool = True) -> Cost:
+        key = (comp_name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        ops = self.computations.get(comp_name, [])
+        defs: dict[str, int] = {}
+        dims: dict[str, list[int]] = {}
+        for op in ops:
+            _, b = _shape_info(op.type_str)
+            defs[op.name] = b
+            dims[op.name] = _first_shape_dims(op.type_str)
+        self._operand_dims = dims
+
+        total = Cost()
+        for op in ops:
+            oc = op.opcode
+            if oc == "while":
+                trips = [int(t) for t in _TRIP_RE.findall(op.attrs)]
+                trip = trips[0] if trips else 1
+                bm = _BODY_RE.search(op.attrs)
+                cm = _COND_RE.search(op.attrs)
+                if bm:
+                    total.add(self.cost_of(bm.group(1), count_bytes), trip)
+                if cm:
+                    total.add(self.cost_of(cm.group(1), count_bytes), trip)
+                continue
+            if oc in ("fusion", "call", "async-start", "custom-call"):
+                cm = _CALLS_RE.search(op.attrs)
+                if cm:
+                    # fusion internals: flops yes, HBM bytes no
+                    total.add(self.cost_of(cm.group(1), False), 1.0)
+                if count_bytes:
+                    total.bytes += self._op_bytes(op, defs)
+                continue
+            if oc == "conditional":
+                for cm in _NAME_REF_RE.finditer(op.attrs):
+                    nm = cm.group(1)
+                    if nm in self.computations:
+                        total.add(self.cost_of(nm, count_bytes), 1.0)
+                continue
+            hit = next((c for c in COLLECTIVE_OPS if oc.startswith(c)), None)
+            if hit is not None:
+                if not oc.endswith("-done"):
+                    size = 0.0
+                    for m in _NAME_REF_RE.finditer(op.operands):
+                        size += defs.get(m.group(1), 0)
+                    total.coll_bytes[hit] = total.coll_bytes.get(hit, 0) + size
+                    total.coll_count[hit] = total.coll_count.get(hit, 0) + 1
+                    if count_bytes:
+                        total.bytes += self._op_bytes(op, defs)
+                continue
+            # plain op
+            self._operand_dims = dims
+            total.flops += self._op_flops(op)
+            if count_bytes:
+                total.bytes += self._op_bytes(op, defs)
+        self._memo[key] = total
+        return total
+
+    def module_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry, True)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).module_cost()
+
+
+_CONVERT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*f32\[([\d,]+)\][^=]*?"
+    r"(convert|copy)\(", re.M)
+
+
+def f32_convert_overhead(hlo_text: str, min_bytes: int = 64 << 20) -> int:
+    """Bytes of large top-level f32 convert/copy buffers.
+
+    XLA:CPU lowers bf16 dot operands via f32 converts and hoists them out
+    of loops — buffers a TPU build would never allocate. Their total
+    (double-count-prone upper bound) lets EXPERIMENTS.md report a
+    TPU-adjusted peak-memory estimate next to the measured CPU value.
+    """
+    total = 0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            total += b
+    return total

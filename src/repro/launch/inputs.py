@@ -1,0 +1,42 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import abstract_cache
+from repro.models.config import ModelConfig, ShapeConfig
+
+I32 = jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract input batch for the given cell. kind-dependent:
+
+    train   -> {tokens, labels [, img_embeds]}
+    prefill -> {tokens [, img_embeds]}
+    decode  -> {tokens(B,1), cache, pos}
+    """
+    gb, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    def tok(b, length):
+        if cfg.n_codebooks:
+            return sds((b, length, cfg.n_codebooks), I32)
+        return sds((b, length), I32)
+
+    if shape.kind == "decode":
+        return {
+            "tokens": tok(gb, 1),
+            "cache": abstract_cache(cfg, gb, s, jnp.dtype(cfg.dtype)),
+            "pos": sds((), I32),
+        }
+
+    text_len = s - cfg.n_img_tokens if cfg.n_img_tokens else s
+    batch = {"tokens": tok(gb, text_len)}
+    if cfg.n_img_tokens:
+        batch["img_embeds"] = sds((gb, cfg.n_img_tokens, 1024),
+                                  jnp.dtype(cfg.dtype))
+    if shape.kind == "train":
+        batch["labels"] = tok(gb, text_len)
+    return batch

@@ -1,0 +1,40 @@
+"""Production mesh builders (as FUNCTIONS — importing this module never
+touches jax device state).
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is pure data parallelism across pods (slower inter-pod links),
+so gradients cross pods once per step while model collectives stay inside
+a pod.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Tiny host-device mesh for CI tests (requires >= prod(shape) devs)."""
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices for test mesh")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,38 @@
+"""Sharding-spec derivation for optimizer states and step signatures."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.optim.optimizers import Optimizer, OptState
+
+PyTree = Any
+
+_isp = lambda x: isinstance(x, P)
+
+
+def opt_state_specs(opt: Optimizer, param_specs: PyTree) -> OptState:
+    """PartitionSpec tree shaped like opt.init(params)'s output."""
+    if opt.name == "sgd":
+        inner = param_specs
+    elif opt.name == "adamw":
+        inner = {"m": param_specs, "v": param_specs}
+    elif opt.name == "adafactor":
+        def one(spec: P):
+            parts = tuple(spec)
+            if len(parts) >= 2:
+                return {"r": P(*parts[:-1]),
+                        "c": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": spec}
+
+        inner = jax.tree.map(one, param_specs, is_leaf=_isp)
+    else:  # pragma: no cover
+        raise ValueError(opt.name)
+    return OptState(inner=inner, step=P())
+
+
+def to_named(mesh, tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=_isp)

@@ -1,0 +1,17 @@
+"""repro.models — unified decoder substrate for the assigned archs."""
+from .config import ModelConfig, ShapeConfig, SHAPES, SUBQUADRATIC, reduced
+from .lm import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward_loss,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "SUBQUADRATIC", "reduced",
+    "abstract_cache", "abstract_params", "decode_step", "forward_loss",
+    "init_cache", "init_params", "prefill",
+]

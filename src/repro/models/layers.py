@@ -1,0 +1,674 @@
+"""Layer primitives for the unified decoder.
+
+Everything is hand-rolled JAX (no flax): each sublayer is an
+``init_*(key, cfg) -> params`` plus ``*_apply(params, x, ...) -> y`` pair.
+Numerics: params in cfg.dtype (bf16 by default), matmul accumulation and
+softmax/norms in fp32.
+
+Attention is *blockwise* (flash-style, pure JAX): an outer scan over query
+chunks and an inner scan over KV chunks with an online softmax — O(S)
+memory so prefill_32k never materializes an (S, S) score matrix. Causal
+masking is applied per chunk pair; sliding-window attention restricts the
+inner scan to the static neighbouring chunks (used by hymba @ long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import shard
+from .config import ModelConfig
+
+PyTree = Any
+F32 = jnp.float32
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    s = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * s).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> jax.Array:
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); pos: (S,) or (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = pos[..., :, None].astype(F32) * freqs        # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(q, k, v, mask, scale):
+    """q,k:(B,Cq,H,D) v:(B,Ck,KV,Dv) mask:(Cq,Ck) -> unnormalized o, m, l.
+
+    v's head dim may differ from q/k's (MLA).
+    """
+    b, cq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qh = q.reshape(b, cq, kv, rep, d)
+    # fp32 accumulation WITHOUT materializing fp32 copies of K/V
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k,
+                   preferred_element_type=F32)
+    s = s * scale
+    # -1e30 (not -inf) keeps fully-masked rows NaN-free in fwd and bwd.
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)                             # (B,G,R,Cq)
+    p = jnp.exp(s - jax.lax.stop_gradient(m)[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    return o, m, l
+
+
+def blockwise_attention(
+    q: jax.Array,           # (B, S, H, D)
+    k: jax.Array,           # (B, T, KV, D)
+    v: jax.Array,
+    *,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention; memory O(S * chunk). Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    dv = v.shape[3]
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    # pad to chunk multiples
+    sp = -(-s // q_chunk) * q_chunk
+    tp = -(-t // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    nq, nk = sp // q_chunk, tp // kv_chunk
+
+    qs = qp.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(b, nk, kv_chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(b, nk, kv_chunk, kv, dv).transpose(1, 0, 2, 3, 4)
+
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_and_idx):
+            o, m, l = carry
+            (ki, vi), ik = ki_and_idx
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask &= (kpos < t)[None, :]
+            oi, mi, li = _attend_chunk(qi, ki, vi, mask, scale)
+            m_new = jnp.maximum(m, mi)
+            a_old = jnp.exp(m - m_new)
+            a_new = jnp.exp(mi - m_new)
+            o = o * a_old[..., None] + oi * a_new[..., None]
+            l = l * a_old + li * a_new
+            return (o, m_new, l), None
+
+        rep = h // kv
+        o0 = jnp.zeros((b, kv, rep, q_chunk, dv), F32)
+        m0 = jnp.full((b, kv, rep, q_chunk), -1e30, F32)
+        l0 = jnp.zeros((b, kv, rep, q_chunk), F32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0), ((ks, vs), jnp.arange(nk)))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B,G,R,Cq,Dv) -> (B,Cq,H,Dv)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, dv)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, dv)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sublayer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nh * hd, dt),
+        "wk": dense_init(ks[1], d, nkv * hd, dt),
+        "wv": dense_init(ks[2], d, nkv * hd, dt),
+        "wo": dense_init(ks[3], nh * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def attn_qkv(p, x, cfg: ModelConfig, pos):
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    q = shard(dense(x, p["wq"]).reshape(b, s, nh, hd), "attn_q")
+    k = shard(dense(x, p["wk"]).reshape(b, s, nkv, hd), "attn_kv")
+    v = shard(dense(x, p["wv"]).reshape(b, s, nkv, hd), "attn_kv")
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, window=None):
+    """Full (prefill/train) self-attention."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = attn_qkv(p, x, cfg, pos)
+    o = blockwise_attention(q, k, v, causal=True, window=window)
+    return dense(o.reshape(b, s, -1), p["wo"])
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache, pos):
+    """One-token decode. cache: {k:(B,T,KV,D), v:...}; pos: scalar."""
+    b, s, _ = x.shape  # s == 1
+    q, k, v = attn_qkv(p, x, cfg, pos + jnp.arange(s))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    t = ck.shape[1]
+    kv = ck.shape[2]
+    rep = cfg.n_heads // kv
+    qh = q.reshape(b, s, kv, rep, cfg.hd)
+    sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh.astype(ck.dtype), ck,
+                    preferred_element_type=F32)
+    sc = sc / math.sqrt(cfg.hd)
+    kpos = jnp.arange(t)
+    mask = kpos[None, :] <= pos
+    if cfg.window is not None:
+        mask &= kpos[None, :] > pos - cfg.window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", pattn.astype(cv.dtype), cv,
+                   preferred_element_type=F32)
+    o = o.reshape(b, s, -1).astype(x.dtype)
+    return dense(o, p["wo"]), {"k": ck, "v": cv}
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
+    return {
+        "k": jnp.zeros((batch, t, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((batch, t, cfg.n_kv, cfg.hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    d, hd, nh = cfg.d_model, cfg.hd, cfg.n_heads
+    rd, kvl, ql = cfg.rope_head_dim, cfg.kv_lora, cfg.q_lora
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d, ql, dt),              # q down
+        "q_norm": rmsnorm_init(ql, dt),
+        "wq_b": dense_init(ks[1], ql, nh * (hd + rd), dt), # q up (nope+rope)
+        "wkv_a": dense_init(ks[2], d, kvl + rd, dt),       # kv down + k_rope
+        "kv_norm": rmsnorm_init(kvl, dt),
+        "wk_b": dense_init(ks[3], kvl, nh * hd, dt),       # k up (nope)
+        "wv_b": dense_init(ks[4], kvl, nh * hd, dt),       # v up
+        "wo": dense_init(ks[5], nh * hd, d, dt),
+    }
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, pos):
+    b, s, _ = x.shape
+    hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
+    qa = rmsnorm(dense(x, p["wq_a"]), p["q_norm"])
+    qb = dense(qa, p["wq_b"]).reshape(b, s, nh, hd + rd)
+    q_nope, q_rope = qb[..., :hd], qb[..., hd:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kva = dense(x, p["wkv_a"])
+    c_kv = rmsnorm(kva[..., : cfg.kv_lora], p["kv_norm"])   # (B,S,kvl)
+    k_rope = kva[..., cfg.kv_lora:].reshape(b, s, 1, rd)
+    k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, window=None):
+    b, s, _ = x.shape
+    hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
+    pos = jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos)
+    k_nope = dense(c_kv, p["wk_b"]).reshape(b, s, nh, hd)
+    v = dense(c_kv, p["wv_b"]).reshape(b, s, nh, hd)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, nh, rd))], -1)
+    o = blockwise_attention(q, k, v, causal=True, window=window)
+    return dense(o.reshape(b, s, -1), p["wo"])
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Decode with the *compressed* cache (c_kv + k_rope) — MLA's point."""
+    b, s, _ = x.shape
+    hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos + jnp.arange(s))
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, 1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), pos, 1)
+    t = cc.shape[1]
+    # absorb k up-projection into q (the MLA decode trick):
+    # score = q_nope . (W_kb c) = (W_kb^T q_nope) . c
+    wkb = p["wk_b"].reshape(cfg.kv_lora, nh, hd)
+    q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(wkb.dtype), wkb,
+                     preferred_element_type=F32)
+    s_c = jnp.einsum("bqhl,bkl->bhqk", q_c.astype(cc.dtype), cc,
+                     preferred_element_type=F32)
+    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(cr.dtype), cr,
+                     preferred_element_type=F32)
+    sc = (s_c + s_r) / math.sqrt(hd + rd)
+    mask = jnp.arange(t)[None, :] <= pos
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    o_c = jnp.einsum("bhqk,bkl->bqhl", pattn.astype(cc.dtype), cc,
+                     preferred_element_type=F32)          # (B,1,H,kvl)
+    wvb = p["wv_b"].reshape(cfg.kv_lora, nh, hd)
+    o = jnp.einsum("bqhl,lhd->bqhd", o_c.astype(wvb.dtype), wvb,
+                   preferred_element_type=F32)
+    o = o.reshape(b, s, -1).astype(x.dtype)
+    return dense(o, p["wo"]), {"c_kv": cc, "k_rope": cr}
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
+    return {
+        "c_kv": jnp.zeros((batch, t, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, t, cfg.rope_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> PyTree:
+    dt = _dtype(cfg)
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, ff, dt),
+        "w_up": dense_init(ks[1], d, ff, dt),
+        "w_down": dense_init(ks[2], ff, d, dt),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    g = dense(x, p["w_gate"])
+    act = jax.nn.gelu(g) if cfg.ffn == "geglu" else jax.nn.silu(g)
+    return dense(act * dense(x, p["w_up"]), p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, shared experts, capacity-dropped chunked dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff)) * s).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff)) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d))
+                   * (1.0 / math.sqrt(ff))).astype(dt),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks[4], cfg, cfg.n_shared * cfg.moe_dff)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B, S, d). GShard-style dispatch over G token groups.
+
+    Groups are sharded over the dp axes (rule "moe_groups"), so the
+    position cumsum and both dispatch einsums are shard-LOCAL; expert
+    tensors are sharded over the model axis (rule "moe_experts") so
+    expert FFNs are local too. The only collective left is the combine
+    psum back into the (dp-sharded) token layout — the structure a real
+    MoE pod run wants. (The pre-hillclimb version scanned chunks over an
+    unsharded token axis: cross-device cumsum -> collective-permute
+    chains + per-chunk all-reduces; see EXPERIMENTS.md §Perf.)
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    chunk = min(cfg.moe_chunk, t)
+    tp = -(-t // chunk) * chunk
+    xt = jnp.pad(xt, ((0, tp - t), (0, 0)))
+    g = tp // chunk
+    cap = max(int(chunk * k / e * cfg.capacity_factor), 4)
+    cd = x.dtype
+
+    xg = shard(xt.reshape(g, chunk, d), "moe_groups")         # (G, C, d)
+    logits = dense(xg.astype(F32), p["router"])               # (G, C, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                  # (G, C, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, e, dtype=F32)                # (G, C, k, E)
+    flat = onehot.reshape(g, chunk * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, chunk, k, e)
+    keep = (pos < cap) & (onehot > 0)
+
+    disp = jnp.zeros((g, chunk, e, cap), cd)
+    comb = jnp.zeros((g, chunk, e, cap), cd)
+    for kk in range(k):
+        sel = onehot[:, :, kk] * keep[:, :, kk].astype(F32)   # (G, C, E)
+        p_oh = jax.nn.one_hot(
+            pos[:, :, kk].astype(jnp.int32), cap, dtype=F32)  # (G, C, E, cap)
+        d_k = sel[..., None] * p_oh
+        disp = disp + d_k.astype(cd)
+        comb = comb + (gate_vals[:, :, kk, None, None] * d_k).astype(cd)
+    disp = shard(disp, "moe_dispatch")
+    comb = shard(comb, "moe_dispatch")
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg,
+                    preferred_element_type=F32).astype(cd)
+    xe = shard(xe, "moe_experts")
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, p["w_gate"],
+                   preferred_element_type=F32)).astype(cd) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"],
+                     preferred_element_type=F32).astype(cd)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"],
+                    preferred_element_type=F32).astype(cd)
+    ye = shard(ye, "moe_experts")
+    y = jnp.einsum("gtec,gecd->gtd", comb, ye,
+                   preferred_element_type=F32)
+    y = y.reshape(tp, d)[:t].reshape(b, s, d).astype(x.dtype)
+    if cfg.n_shared:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.ssd_heads
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * n
+    p = {
+        "a_log": jnp.zeros((h,), F32),
+        "d_skip": jnp.ones((h,), F32),
+        "dt_bias": jnp.zeros((h,), F32),
+        "out_norm": rmsnorm_init(di, dt),
+        "w_out": dense_init(ks[2], di, d, dt),
+    }
+    if cfg.ssd_split_proj:
+        p.update({
+            "w_in_z": dense_init(ks[0], d, di, dt),
+            "w_in_x": dense_init(ks[1], d, di, dt),
+            "w_in_bc": dense_init(ks[3], d, 2 * n, dt),
+            "w_in_dt": dense_init(ks[4], d, h, dt),
+            "conv_w_x": (jax.random.normal(ks[5], (cfg.conv_k, di))
+                         * 0.1).astype(dt),
+            "conv_w_bc": (jax.random.normal(ks[5], (cfg.conv_k, 2 * n))
+                          * 0.1).astype(dt),
+        })
+    else:
+        p.update({
+            "w_in": dense_init(ks[0], d, 2 * di + 2 * n + h, dt),
+            "conv_w": (jax.random.normal(ks[1], (cfg.conv_k, conv_dim))
+                       * 0.1).astype(dt),
+        })
+    return p
+
+
+def _ssd_in_proj(p, x, cfg: ModelConfig):
+    """Returns (z, conv_in, dt) where conv_in = [x, B, C]."""
+    di, n = cfg.d_inner, cfg.d_state
+    if cfg.ssd_split_proj:
+        z = dense(x, p["w_in_z"])
+        xin = dense(x, p["w_in_x"])
+        bcmat = dense(x, p["w_in_bc"])
+        dtp = dense(x, p["w_in_dt"])
+        return z, jnp.concatenate([xin, bcmat], -1), dtp
+    zxbcdt = dense(x, p["w_in"])
+    z, xin, bmat, cmat, dtp = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, jnp.concatenate([xin, bmat, cmat], -1), dtp
+
+
+def _ssd_conv_weight(p, cfg: ModelConfig):
+    if cfg.ssd_split_proj:
+        return jnp.concatenate([p["conv_w_x"], p["conv_w_bc"]], -1)
+    return p["conv_w"]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L) -> (..., L, L) lower-tri cumulative sums for decay."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(l)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int):
+    """SSD chunked scan (Dao & Gu 2024).
+
+    x: (B,S,H,P) dt: (B,S,H) a: (H,) neg-decay, b,c: (B,S,N).
+    Returns y: (B,S,H,P), final state (B,H,P,N).
+    """
+    bsz, s, h, p_dim = x.shape
+    n = bmat.shape[-1]
+    sp = -(-s // chunk) * chunk
+    pad = sp - s
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+    cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = sp // chunk
+
+    xr = x.reshape(bsz, nc, chunk, h, p_dim)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = bmat.reshape(bsz, nc, chunk, n)
+    cr = cmat.reshape(bsz, nc, chunk, n)
+
+    da = dtr * a[None, None, None, :]            # (B,C,L,H) decay logs (<=0)
+    dax = xr * dtr[..., None]                    # dt-weighted inputs
+
+    # intra-chunk (quadratic within chunk)
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))       # (B,C,H,L,L)
+    scores = jnp.einsum("bcln,bckn->bclk", cr, br)          # (B,C,L,L)
+    y_diag = jnp.einsum("bclk,bchlk,bckhp->bclhp",
+                        scores, lmat, dax)
+
+    # chunk-final states
+    decay_end = jnp.exp(jnp.cumsum(da[..., ::-1, :], axis=2)[..., ::-1, :]
+                        - da)                                # sum_{l'>l}
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", br, decay_end, dax)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))               # (B,C,H)
+
+    def step(carry, inp):
+        st_in = carry
+        st_new, dec = inp
+        st = st_in * dec[..., None, None] + st_new
+        return st, st_in                                     # emit state *before* chunk
+
+    st0 = jnp.zeros((bsz, h, p_dim, n), F32)
+    final, prior = jax.lax.scan(
+        step,
+        st0,
+        (states.transpose(1, 0, 2, 3, 4).astype(F32),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    prior = prior.transpose(1, 0, 2, 3, 4)                   # (B,C,H,P,N)
+
+    # off-diagonal contribution: carried state into each position
+    decay_in = jnp.exp(jnp.cumsum(da, axis=2))               # decay from chunk start
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       cr, decay_in, prior)
+
+    y = (y_diag + y_off).reshape(bsz, sp, h, p_dim)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_block_apply(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                    decode: bool = False):
+    """Full mamba2 block: in-proj -> conv -> SSD -> gated norm -> out-proj.
+
+    Train/prefill: decode=False, states None -> returns y only.
+    Decode: x is (B,1,d); states updated, returns (y, conv_state, ssm_state).
+    """
+    bsz, s, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.ssd_heads, cfg.ssd_headdim
+    z, conv_in, dt = _ssd_in_proj(p, x, cfg)                 # (B,S,conv_dim)
+    cw = _ssd_conv_weight(p, cfg)
+
+    if not decode:
+        # causal depthwise conv via k shifted adds (k is tiny)
+        k = cfg.conv_k
+        conv = sum(
+            jnp.pad(conv_in, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, : s]
+            * cw[i]
+            for i in range(k)
+        )
+        new_conv_state = None
+    else:
+        # conv_state: (B, k-1, conv_dim) of the most recent inputs
+        k = cfg.conv_k
+        hist = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,k,conv)
+        conv = jnp.einsum("bkc,kc->bc", hist, cw)[:, None]
+        new_conv_state = hist[:, 1:]
+
+    conv = jax.nn.silu(conv)
+    xc, bc, cc = jnp.split(conv, [di, di + n], axis=-1)
+    xh = xc.reshape(bsz, s, h, pd)
+    a = -jnp.exp(p["a_log"])                                  # (H,) < 0
+    dt_full = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])  # (B,S,H)
+
+    if not decode:
+        y, final = ssd_scan(xh, dt_full, a, bc.astype(F32), cc.astype(F32),
+                            cfg.ssd_chunk)
+        new_ssm = final
+    else:
+        # single-step recurrence (update math in f32; state stored in
+        # cfg.ssd_state_dtype — bf16 halves decode state traffic)
+        st = ssm_state.astype(F32)                            # (B,H,P,N)
+        dt1 = dt_full[:, 0]                                   # (B,H)
+        da = jnp.exp(dt1 * a[None, :])                        # (B,H)
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh[:, 0].astype(F32),
+                         bc[:, 0].astype(F32))
+        st = st * da[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", cc[:, 0].astype(F32), st)
+        y = y[:, None].reshape(bsz, 1, h, pd)
+        new_ssm = st.astype(ssm_state.dtype)
+    y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
+    out = dense(y, p["w_out"])
+    if decode:
+        return out, new_conv_state, new_ssm
+    return out
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_k - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssd_heads, cfg.ssd_headdim,
+                          cfg.d_state), jnp.dtype(cfg.ssd_state_dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (hymba): parallel attention + SSD heads, outputs fused
+# ---------------------------------------------------------------------------
+
+def hybrid_init(key, cfg: ModelConfig) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {
+        "attn": attn_init(k1, cfg),
+        "ssd": ssd_init(k2, cfg),
+        "attn_norm": rmsnorm_init(cfg.d_model, dt),
+        "ssd_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+
+
+def hybrid_apply(p, x, cfg: ModelConfig, *, window=None):
+    ya = attn_apply(p["attn"], x, cfg, window=window)
+    ys = ssd_block_apply(p["ssd"], x, cfg)
+    return 0.5 * (rmsnorm(ya, p["attn_norm"]) + rmsnorm(ys, p["ssd_norm"]))
+
+
+def hybrid_decode(p, x, cfg: ModelConfig, cache, pos):
+    ya, attn_cache = attn_decode(p["attn"], x, cfg, cache["attn"], pos)
+    ys, conv, ssm = ssd_block_apply(
+        p["ssd"], x, cfg, conv_state=cache["ssd"]["conv"],
+        ssm_state=cache["ssd"]["ssm"], decode=True)
+    y = 0.5 * (rmsnorm(ya, p["attn_norm"]) + rmsnorm(ys, p["ssd_norm"]))
+    return y, {"attn": attn_cache, "ssd": {"conv": conv, "ssm": ssm}}

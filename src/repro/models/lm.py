@@ -1,0 +1,374 @@
+"""Unified decoder LM: embed -> lax.scan(layers) -> norm -> head.
+
+One skeleton serves all ten assigned architectures (dense / MoE / MLA /
+SSD / hybrid / audio / vlm). Layers are stacked along a leading L axis and
+scanned, so HLO size and compile time are O(1) in depth. ``jax.checkpoint``
+on the layer body gives the save-residual-only remat policy.
+
+Modality frontends are stubs per the assignment: musicgen consumes
+EnCodec *token* ids over K codebooks (sum of codebook embeddings);
+internvl2 consumes precomputed ViT patch embeddings plus text tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import shard
+from .config import ModelConfig
+from . import layers as L
+
+PyTree = Any
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    mixer_init = {
+        "attn": L.attn_init, "mla": L.mla_init,
+        "ssd": L.ssd_init, "hybrid": L.hybrid_init,
+    }[cfg.mixer]
+    p = {"norm1": L.rmsnorm_init(cfg.d_model, dt),
+         "mixer": mixer_init(k1, cfg)}
+    if cfg.ffn != "none":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = (L.moe_init(k2, cfg) if cfg.ffn == "moe"
+                    else L.mlp_init(k2, cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    lkeys = jax.random.split(keys[0], cfg.n_layers)
+    params: dict[str, Any] = {
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(lkeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.n_codebooks:  # musicgen: per-codebook embeddings + heads
+        params["embed"] = (jax.random.normal(
+            keys[1], (cfg.n_codebooks, cfg.vocab, cfg.d_model)) * 0.02
+        ).astype(dt)
+        params["head"] = L.dense_init(
+            keys[2], cfg.d_model, cfg.n_codebooks * cfg.vocab, dt)
+    else:
+        params["embed"] = (jax.random.normal(
+            keys[1], (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dt)
+        if not cfg.tie_embeddings:
+            params["head"] = L.dense_init(keys[2], cfg.d_model,
+                                          cfg.padded_vocab, dt)
+    if cfg.n_img_tokens:  # internvl2: project stub ViT embeddings
+        params["img_proj"] = L.dense_init(keys[3], 1024, cfg.d_model, dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def layer_apply(lp, x, cfg: ModelConfig, window=None):
+    h = L.rmsnorm(x, lp["norm1"])
+    if cfg.mixer == "attn":
+        mix = L.attn_apply(lp["mixer"], h, cfg, window=window)
+    elif cfg.mixer == "mla":
+        mix = L.mla_apply(lp["mixer"], h, cfg, window=window)
+    elif cfg.mixer == "ssd":
+        mix = L.ssd_block_apply(lp["mixer"], h, cfg)
+    elif cfg.mixer == "hybrid":
+        mix = L.hybrid_apply(lp["mixer"], h, cfg, window=window)
+    else:  # pragma: no cover
+        raise ValueError(cfg.mixer)
+    x = x + mix
+    if cfg.ffn != "none":
+        h2 = L.rmsnorm(x, lp["norm2"])
+        f = (L.moe_apply(lp["ffn"], h2, cfg) if cfg.ffn == "moe"
+             else L.mlp_apply(lp["ffn"], h2, cfg))
+        x = x + f
+    return shard(x, "residual")
+
+
+def layer_decode(lp, x, cache_l, pos, cfg: ModelConfig):
+    h = L.rmsnorm(x, lp["norm1"])
+    if cfg.mixer == "attn":
+        mix, nc = L.attn_decode(lp["mixer"], h, cfg, cache_l, pos)
+    elif cfg.mixer == "mla":
+        mix, nc = L.mla_decode(lp["mixer"], h, cfg, cache_l, pos)
+    elif cfg.mixer == "ssd":
+        mix, conv, ssm = L.ssd_block_apply(
+            lp["mixer"], h, cfg, conv_state=cache_l["conv"],
+            ssm_state=cache_l["ssm"], decode=True)
+        nc = {"conv": conv, "ssm": ssm}
+    elif cfg.mixer == "hybrid":
+        mix, nc = L.hybrid_decode(lp["mixer"], h, cfg, cache_l, pos)
+    else:  # pragma: no cover
+        raise ValueError(cfg.mixer)
+    x = x + mix
+    if cfg.ffn != "none":
+        h2 = L.rmsnorm(x, lp["norm2"])
+        f = (L.moe_apply(lp["ffn"], h2, cfg) if cfg.ffn == "moe"
+             else L.mlp_apply(lp["ffn"], h2, cfg))
+        x = x + f
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    if cfg.n_codebooks:
+        # tokens: (B, S, K) — sum codebook embeddings
+        parts = [params["embed"][k][tokens[..., k]]
+                 for k in range(cfg.n_codebooks)]
+        x = sum(parts)
+    else:
+        x = params["embed"][tokens]
+    return shard(x.astype(jnp.dtype(cfg.dtype)), "residual")
+
+
+def backbone(params, x, cfg: ModelConfig, window=None):
+    """x: (B, S, d) embeddings -> final hidden states."""
+    fn = partial(layer_apply, cfg=cfg, window=window)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, lp):
+        return fn(lp, carry), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def lm_loss(params, hidden, labels, cfg: ModelConfig):
+    """Chunked CE over the sequence; labels == -1 are masked.
+
+    hidden: (B, S, d); labels: (B, S) or (B, S, K) for codebooks.
+    """
+    b, s, d = hidden.shape
+    ck = min(cfg.logit_chunk, s)
+    sp = -(-s // ck) * ck
+    hp = jnp.pad(hidden, ((0, 0), (0, sp - s), (0, 0)))
+    lab_pad = [(0, 0), (0, sp - s)] + [(0, 0)] * (labels.ndim - 2)
+    lp = jnp.pad(labels, lab_pad, constant_values=-1)
+    g = sp // ck
+    hs = hp.reshape(b, g, ck, d).transpose(1, 0, 2, 3)
+    ls = lp.reshape((b, g, ck) + labels.shape[2:]).swapaxes(0, 1)
+    w = head_weight(params, cfg)
+
+    def chunk(acc, inp):
+        hc, lc = inp
+        logits = jnp.einsum("btd,dv->btv", hc.astype(F32), w.astype(F32))
+        if cfg.n_codebooks:
+            logits = logits.reshape(b, ck, cfg.n_codebooks, cfg.vocab)
+        logits = shard(logits, "logits")
+        vocab_iota = jnp.arange(logits.shape[-1])
+        if logits.shape[-1] != cfg.vocab:   # mask padded vocab rows
+            logits = jnp.where(vocab_iota < cfg.vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot_ll = jnp.sum(
+            jnp.where(lc[..., None] == vocab_iota, logits, 0.0), axis=-1)
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - onehot_ll, 0.0)
+        loss_sum, count = acc
+        return (loss_sum + nll.sum(), count + valid.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(chunk, (0.0, 0), (hs, ls))
+    return loss_sum / jnp.maximum(count, 1)
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def assemble_inputs(params, batch, cfg: ModelConfig):
+    """Returns (embeddings, labels) handling modality frontends."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    labels = batch.get("labels")
+    if cfg.n_img_tokens:
+        img = batch["img_embeds"].astype(x.dtype)         # (B, N, 1024)
+        iv = L.dense(img, params["img_proj"])             # (B, N, d)
+        x = jnp.concatenate([iv, x], axis=1)
+        if labels is not None:
+            pad = jnp.full(iv.shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    return x, labels
+
+
+def forward_loss(params, batch, cfg: ModelConfig, window=None):
+    x, labels = assemble_inputs(params, batch, cfg)
+    hidden = backbone(params, x, cfg, window=window)
+    return lm_loss(params, hidden, labels, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, window=None):
+    """Process a full prompt; returns last-position logits + KV cache."""
+    x, _ = assemble_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, s, jnp.dtype(cfg.dtype))
+    fn = partial(_prefill_layer, cfg=cfg, window=window, seqlen=s)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, inp):
+        lp, _dummy = inp
+        x_new, kv = fn(lp, carry)
+        return x_new, kv
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    last = hidden[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last.astype(F32),
+                        head_weight(params, cfg).astype(F32))
+    if logits.shape[-1] != cfg.vocab and not cfg.n_codebooks:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    if cfg.n_codebooks:
+        logits = logits.reshape(b, cfg.n_codebooks, cfg.vocab)
+    return logits, cache
+
+
+def _prefill_layer(lp, x, cfg: ModelConfig, window, seqlen):
+    """Like layer_apply but also emits this layer's populated cache."""
+    h = L.rmsnorm(x, lp["norm1"])
+    b = x.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.mixer in ("attn", "hybrid"):
+        ap = lp["mixer"]["attn"] if cfg.mixer == "hybrid" else lp["mixer"]
+        pos = jnp.arange(seqlen)
+        q, k, v = L.attn_qkv(ap, h, cfg, pos)
+        o = L.blockwise_attention(q, k, v, causal=True, window=window)
+        mix_attn = L.dense(o.reshape(b, seqlen, -1), ap["wo"])
+        kv = {"k": shard(k.astype(dt), "kv_cache"),
+              "v": shard(v.astype(dt), "kv_cache")}
+        if cfg.mixer == "hybrid":
+            ys, conv, ssm = _ssd_prefill(lp["mixer"]["ssd"], h, cfg)
+            mix = 0.5 * (L.rmsnorm(mix_attn, lp["mixer"]["attn_norm"])
+                         + L.rmsnorm(ys, lp["mixer"]["ssd_norm"]))
+            kv = {"attn": kv, "ssd": {"conv": conv, "ssm": ssm}}
+        else:
+            mix = mix_attn
+    elif cfg.mixer == "mla":
+        pos = jnp.arange(seqlen)
+        q_nope, q_rope, c_kv, k_rope = L._mla_qkv(lp["mixer"], h, cfg, pos)
+        nh, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+        k_nope = L.dense(c_kv, lp["mixer"]["wk_b"]).reshape(b, seqlen, nh, hd)
+        v = L.dense(c_kv, lp["mixer"]["wv_b"]).reshape(b, seqlen, nh, hd)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, seqlen, nh, rd))], -1)
+        o = L.blockwise_attention(qq, kk, v, causal=True, window=window)
+        mix = L.dense(o.reshape(b, seqlen, -1), lp["mixer"]["wo"])
+        kv = {"c_kv": shard(c_kv.astype(dt), "mla_cache"),
+              "k_rope": k_rope[:, :, 0].astype(dt)}
+    elif cfg.mixer == "ssd":
+        mix, conv, ssm = _ssd_prefill(lp["mixer"], h, cfg)
+        kv = {"conv": conv, "ssm": ssm}
+    else:  # pragma: no cover
+        raise ValueError(cfg.mixer)
+    x = x + mix
+    if cfg.ffn != "none":
+        h2 = L.rmsnorm(x, lp["norm2"])
+        f = (L.moe_apply(lp["ffn"], h2, cfg) if cfg.ffn == "moe"
+             else L.mlp_apply(lp["ffn"], h2, cfg))
+        x = x + f
+    return shard(x, "residual"), kv
+
+
+def _ssd_prefill(p, h, cfg: ModelConfig):
+    """SSD forward that also returns final (conv, ssm) states."""
+    b, s, _ = h.shape
+    di, n = cfg.d_inner, cfg.d_state
+    z, conv_in, dtp = L._ssd_in_proj(p, h, cfg)
+    cw = L._ssd_conv_weight(p, cfg)
+    k = cfg.conv_k
+    conv = sum(
+        jnp.pad(conv_in, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, : s]
+        * cw[i]
+        for i in range(k))
+    conv_state = conv_in[:, s - (k - 1):, :]
+    conv_act = jax.nn.silu(conv)
+    xc, bc, cc = jnp.split(conv_act, [di, di + n], axis=-1)
+    xh = xc.reshape(b, s, cfg.ssd_heads, cfg.ssd_headdim)
+    a = -jnp.exp(p["a_log"])
+    dt_full = jax.nn.softplus(dtp.astype(F32) + p["dt_bias"])
+    y, final = L.ssd_scan(xh, dt_full, a, bc.astype(F32), cc.astype(F32),
+                          cfg.ssd_chunk)
+    y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(h.dtype)
+    y = L.rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
+    return L.dense(y, p["w_out"]), conv_state.astype(h.dtype), final
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One token for the whole batch. tokens: (B, 1) or (B, 1, K)."""
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(carry, inp):
+        lp, cl = inp
+        # barrier: stops XLA hoisting per-layer cache converts out of the
+        # scan as whole-stack buffers (CPU backend lowers bf16 dots via
+        # f32 converts; hoisted, they would double cache memory).
+        cl = jax.lax.optimization_barrier(cl)
+        x_new, nc = layer_decode(lp, carry, cl, pos, cfg)
+        return x_new, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("btd,dv->btv", hidden.astype(F32),
+                        head_weight(params, cfg).astype(F32))
+    if logits.shape[-1] != cfg.vocab and not cfg.n_codebooks:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    if cfg.n_codebooks:
+        b = logits.shape[0]
+        logits = logits.reshape(b, 1, cfg.n_codebooks, cfg.vocab)
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
+    """Per-layer decode cache stacked on a leading L axis (scannable)."""
+
+    def one(_):
+        if cfg.mixer == "attn":
+            c = L.attn_cache_init(cfg, batch, t, dtype)
+            return {"k": shard(c["k"], "kv_cache"),
+                    "v": shard(c["v"], "kv_cache")}
+        if cfg.mixer == "mla":
+            c = L.mla_cache_init(cfg, batch, t, dtype)
+            return {"c_kv": shard(c["c_kv"], "mla_cache"),
+                    "k_rope": c["k_rope"]}
+        if cfg.mixer == "ssd":
+            return L.ssd_cache_init(cfg, batch, dtype)
+        if cfg.mixer == "hybrid":
+            c = L.attn_cache_init(cfg, batch, t, dtype)
+            return {"attn": {"k": shard(c["k"], "kv_cache"),
+                             "v": shard(c["v"], "kv_cache")},
+                    "ssd": L.ssd_cache_init(cfg, batch, dtype)}
+        raise ValueError(cfg.mixer)
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, t, dtype))

@@ -1,0 +1,15 @@
+"""repro.optim — from-scratch optimizers (no optax in the container)."""
+from .optimizers import (
+    OptState,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    get_optimizer,
+    sgd,
+)
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "OptState", "adamw", "adafactor", "sgd", "clip_by_global_norm",
+    "get_optimizer", "constant", "cosine_decay", "linear_warmup_cosine",
+]

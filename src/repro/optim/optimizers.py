@@ -1,0 +1,174 @@
+"""Optimizers as (init, update) pairs of pure functions.
+
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+
+AdamW keeps fp32 moments; Adafactor keeps a factored second moment
+(row/col statistics) so optimizer memory is ~O(sqrt) of AdamW — the
+default for the 405B-class dry-run cells (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+@dataclasses.dataclass
+class OptState:
+    inner: PyTree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.inner, self.step), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(inner=leaves[0], step=leaves[1])
+
+
+jax.tree_util.register_pytree_node(
+    OptState, OptState.tree_flatten, OptState.tree_unflatten)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(
+            inner=jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+            step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        def upd(g, m, p):
+            g = g.astype(F32) + weight_decay * p.astype(F32)
+            m_new = momentum * m + g
+            step_dir = g + momentum * m_new if nesterov else m_new
+            return (p.astype(F32) - lr * step_dir).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, grads, state.inner, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(inner=new_m, step=state.step + 1)
+
+    return Optimizer(init, update, "sgd")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(
+            inner={"m": jax.tree.map(zeros, params),
+                   "v": jax.tree.map(zeros, params)},
+            step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        t = state.step + 1
+        c1 = 1.0 - b1 ** t.astype(F32)
+        c2 = 1.0 - b2 ** t.astype(F32)
+
+        def upd(g, m, v, p):
+            g = g.astype(F32)
+            m_new = b1 * m.astype(F32) + (1 - b1) * g
+            v_new = b2 * v.astype(F32) + (1 - b2) * g * g
+            mh = m_new / c1
+            vh = v_new / c2
+            step_dir = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(F32)
+            p_new = (p.astype(F32) - lr * step_dir).astype(p.dtype)
+            return p_new, m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        out = jax.tree.map(upd, grads, state.inner["m"], state.inner["v"],
+                           params)
+        is3 = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t_: t_[0], out, is_leaf=is3)
+        new_m = jax.tree.map(lambda t_: t_[1], out, is_leaf=is3)
+        new_v = jax.tree.map(lambda t_: t_[2], out, is_leaf=is3)
+        return new_p, OptState(inner={"m": new_m, "v": new_v}, step=t)
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"r": jnp.zeros(p.shape[:-1], F32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros(p.shape, F32)}
+
+        return OptState(inner=jax.tree.map(one, params),
+                        step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        t = state.step + 1
+        beta = 1.0 - (t.astype(F32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(F32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                r = beta * s["r"] + (1 - beta) * g2.mean(-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(-2)
+                rc = r / jnp.maximum(r.mean(-1, keepdims=True), 1e-30)
+                vhat = rc[..., None] * c[..., None, :]
+                s_new = {"r": r, "c": c}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                s_new = {"v": vhat}
+            u = g * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * u).astype(p.dtype), s_new
+
+        out = jax.tree.map(upd, grads, state.inner, params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and set(x) <= {"r", "c", "v"})
+        ist = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t_: t_[0], out, is_leaf=ist)
+        new_s = jax.tree.map(lambda t_: t_[1], out, is_leaf=ist)
+        return new_p, OptState(inner=new_s, step=t)
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}[name](**kw)

@@ -1,0 +1,31 @@
+"""LR schedules as step -> lr callables (jittable)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32), steps) / steps
+        cos = 0.5 * (1 + jnp.cos(math.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(steps - warmup, 1), final_frac)
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, wu, cos(step - warmup))
+
+    return f

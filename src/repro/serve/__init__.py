@@ -1,0 +1,4 @@
+"""repro.serve — batched inference loops."""
+from .engine import ServeConfig, generate, rnn_serve_frames
+
+__all__ = ["ServeConfig", "generate", "rnn_serve_frames"]

@@ -1,0 +1,6 @@
+"""repro.train — loop, checkpointing, fault tolerance."""
+from .loop import StepTimer, TrainConfig, make_train_step, train
+from . import checkpoint
+
+__all__ = ["TrainConfig", "make_train_step", "train", "StepTimer",
+           "checkpoint"]

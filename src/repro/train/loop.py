@@ -1,0 +1,185 @@
+"""The training loop: microbatched grad accumulation, ADMM-CSB hooks,
+checkpoint/auto-resume, step-time straggler telemetry.
+
+``make_train_step`` builds a single jitted step:
+  grads = mean over microbatches of d(loss + admm_penalty)/d(params)
+  grads = clip(psum'd grads)            (DP mean comes from sharding)
+  params, opt = optimizer.update(...)
+Optionally the int8 error-feedback gradient compressor (dist.compress)
+wraps the accumulation — a distributed-optimization trick measured in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admm_init, admm_penalty, admm_update, admm_finalize
+from repro.optim import clip_by_global_norm, get_optimizer
+from . import checkpoint as ckpt
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    optimizer: str = "adamw"
+    microbatches: int = 1
+    steps: int = 100
+    log_every: int = 10
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+    # ADMM-CSB pruning
+    admm_rho: float = 1e-3
+    admm_every: int = 0          # 0 = disabled; else projection period
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, dict], jax.Array],
+    tcfg: TrainConfig,
+    lr_schedule: Callable | None = None,
+    csb_specs: PyTree | None = None,
+    donate: bool = True,
+):
+    """Returns (step_fn, opt) where
+    step_fn(params, opt_state, admm_state, batch, step) ->
+        (params, opt_state, admm_state, metrics)."""
+    opt = get_optimizer(tcfg.optimizer)
+    sched = lr_schedule or (lambda s: jnp.asarray(tcfg.lr, jnp.float32))
+
+    def total_loss(params, batch, admm_state):
+        loss = loss_fn(params, batch)
+        if csb_specs is not None and admm_state is not None:
+            loss = loss + admm_penalty(params, admm_state, csb_specs)
+        return loss
+
+    def step_fn(params, opt_state, admm_state, batch, step):
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(total_loss)(params, mb, admm_state)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(tcfg.microbatches,
+                                    x.shape[0] // tcfg.microbatches,
+                                    *x.shape[1:]),
+                batch)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+        else:
+            loss, grads = jax.value_and_grad(total_loss)(
+                params, batch, admm_state)
+
+        gnorm = None
+        if tcfg.clip_norm:
+            grads = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = sched(step)
+        params, opt_state = opt.update(grads, opt_state, params, lr,
+                                       tcfg.weight_decay)
+        metrics = {"loss": loss, "lr": lr}
+        return params, opt_state, admm_state, metrics
+
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    return jitted, opt
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Straggler telemetry: wall-time quantiles over a sliding window."""
+
+    window: int = 100
+
+    def __post_init__(self):
+        self.times: list[float] = []
+
+    def record(self, dt: float):
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+
+    def quantiles(self):
+        if not self.times:
+            return {}
+        a = np.asarray(self.times)
+        return {"p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99))}
+
+    def is_straggling(self, dt: float, factor: float = 3.0) -> bool:
+        q = self.quantiles()
+        return bool(q) and dt > factor * q["p50"]
+
+
+def train(
+    loss_fn: Callable,
+    params: PyTree,
+    batches,                     # iterator of (step, batch)
+    tcfg: TrainConfig,
+    lr_schedule=None,
+    csb_specs: PyTree | None = None,
+    eval_fn: Callable | None = None,
+    log: Callable[[str], None] = print,
+):
+    """Run the loop with auto-resume + periodic checkpoints.
+
+    Returns (params, history).
+    """
+    step_fn, opt = make_train_step(loss_fn, tcfg, lr_schedule, csb_specs)
+    opt_state = opt.init(params)
+    admm_state = (admm_init(params, csb_specs, tcfg.admm_rho)
+                  if csb_specs is not None else None)
+    start = 0
+
+    if tcfg.ckpt_dir:
+        got = ckpt.restore_latest(
+            tcfg.ckpt_dir, {"params": params, "opt": opt_state})
+        if got is not None:
+            start, tree, extra = got
+            params, opt_state = tree["params"], tree["opt"]
+            log(f"[resume] restored step {start} from {tcfg.ckpt_dir}")
+
+    timer = StepTimer()
+    history = []
+    for step, batch in batches:
+        if step < start:
+            continue
+        if step >= tcfg.steps:
+            break
+        t0 = time.perf_counter()
+        params, opt_state, admm_state, metrics = step_fn(
+            params, opt_state, admm_state, batch, jnp.asarray(step))
+        if (csb_specs is not None and tcfg.admm_every
+                and (step + 1) % tcfg.admm_every == 0):
+            admm_state = admm_update(params, admm_state, csb_specs)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        timer.record(dt)
+        history.append({"step": step, "loss": loss, "dt": dt})
+        if step % tcfg.log_every == 0:
+            q = timer.quantiles()
+            log(f"step {step:5d} loss {loss:.4f} "
+                f"dt {dt*1e3:.1f}ms p95 {q.get('p95', 0)*1e3:.1f}ms"
+                + (" STRAGGLER" if timer.is_straggling(dt) else ""))
+        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state})
+            ckpt.keep_last(tcfg.ckpt_dir, tcfg.keep_ckpts)
+
+    if csb_specs is not None:
+        params = admm_finalize(params, csb_specs)
+    return params, history

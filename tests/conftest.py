@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately no XLA_FLAGS here — tests must see the real (single)
+# device; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

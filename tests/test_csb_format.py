@@ -1,0 +1,77 @@
+"""CSB storage format (paper Fig. 3): round-trip, NIO, padded twin."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CSBMatrix, CSBSpec, csb_masks, csb_project, padded_csb_from_dense,
+)
+from repro.kernels.ref import densify
+
+
+def _pruned(rng, shape=(64, 48), bm=16, bn=16, rate=0.6):
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    spec = CSBSpec(bm=bm, bn=bn, prune_rate=rate)
+    z = csb_project(w, spec)
+    rm, cm = csb_masks(w, spec)
+    return np.asarray(z), np.asarray(rm), np.asarray(cm), spec
+
+
+def test_roundtrip_exact(rng):
+    z, rm, cm, spec = _pruned(rng)
+    csb = CSBMatrix.from_dense(z, spec.bm, spec.bn, rm, cm)
+    np.testing.assert_array_equal(csb.to_dense(), z)
+
+
+def test_roundtrip_inferred_masks(rng):
+    z, *_ = _pruned(rng)
+    csb = CSBMatrix.from_dense(z, 16, 16)
+    np.testing.assert_array_equal(csb.to_dense(), z)
+
+
+def test_nio_below_csr(rng):
+    z, rm, cm, spec = _pruned(rng, shape=(128, 128), bm=32, bn=32, rate=0.8)
+    csb = CSBMatrix.from_dense(z, 32, 32, rm, cm)
+    assert csb.nio() < 0.6
+    assert CSBMatrix.csr_nio(csb.nnz, 128) > 1.0
+    assert csb.nio() < CSBMatrix.csr_nio(csb.nnz, 128)
+
+
+def test_nio_decays_with_block_size(rng):
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    nios = []
+    for b in (16, 32, 64):
+        spec = CSBSpec(bm=b, bn=b, prune_rate=0.75)
+        z = np.asarray(csb_project(w, spec))
+        rm, cm = [np.asarray(x) for x in csb_masks(w, spec)]
+        nios.append(CSBMatrix.from_dense(z, b, b, rm, cm).nio())
+    assert nios[0] > nios[1] > nios[2]
+
+
+def test_padded_matches_dense(rng):
+    z, rm, cm, spec = _pruned(rng)
+    p = padded_csb_from_dense(z, spec.bm, spec.bn, pad_to=8,
+                              row_mask=rm, col_mask=cm)
+    np.testing.assert_allclose(np.asarray(densify(p)), z, atol=1e-6)
+    assert p.true_flops_per_mvm() <= p.padded_flops_per_mvm()
+
+
+def test_nonuniform_shape_padding(rng):
+    """Matrices not divisible by block size (paper pads SR4's 39-dim)."""
+    w = jnp.asarray(rng.normal(size=(37, 23)).astype(np.float32))
+    spec = CSBSpec(bm=16, bn=16, prune_rate=0.4)
+    z = np.asarray(csb_project(w, spec))
+    csb = CSBMatrix.from_dense(z, 16, 16)
+    np.testing.assert_array_equal(csb.to_dense(), z)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(0.3, 0.9), bs=st.sampled_from([8, 16, 32]))
+def test_format_roundtrip_property(rate, bs):
+    rng = np.random.default_rng(int(rate * 100) + bs)
+    z, rm, cm, spec = _pruned(rng, shape=(64, 64), bm=bs, bn=bs, rate=rate)
+    csb = CSBMatrix.from_dense(z, bs, bs, rm, cm)
+    np.testing.assert_array_equal(csb.to_dense(), z)
+    assert csb.nnz == int((z != 0).sum()) or csb.nnz >= int((z != 0).sum())
+    p = padded_csb_from_dense(z, bs, bs, row_mask=rm, col_mask=cm)
+    np.testing.assert_allclose(np.asarray(densify(p)), z, atol=1e-6)

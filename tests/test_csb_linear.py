@@ -1,0 +1,55 @@
+"""CSBLinear three-mode equivalence + spec-tree builder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSBLinear, CSBSpec, csb_project, csb_specs_for_params
+from repro.models import ModelConfig, init_params
+
+
+def test_modes_agree():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (48, 32))          # (out, in)
+    spec = CSBSpec(bm=16, bn=16, prune_rate=0.5)
+    x = jax.random.normal(key, (4, 32))
+
+    lin = CSBLinear(weight=w, spec=spec, mode="masked")
+    y_masked = lin(x)
+    np.testing.assert_allclose(
+        np.asarray(y_masked),
+        np.asarray(x @ csb_project(w, spec).T), rtol=1e-5, atol=1e-5)
+
+    frozen = lin.freeze()
+    y_csb = frozen(x)
+    np.testing.assert_allclose(np.asarray(y_csb), np.asarray(y_masked),
+                               rtol=2e-5, atol=2e-5)
+    assert frozen.compression() > 1.5
+
+
+def test_transposed_weight():
+    key = jax.random.PRNGKey(1)
+    w_io = jax.random.normal(key, (32, 48))       # (in, out)
+    spec = CSBSpec(bm=16, bn=16, prune_rate=0.5)
+    x = jax.random.normal(key, (3, 32))
+    lin = CSBLinear(weight=w_io, spec=spec, mode="masked", transposed=True)
+    y = lin(x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ csb_project(w_io.T, spec).T),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_spec_tree_selects_projections():
+    cfg = ModelConfig(name="t", mixer="attn", ffn="swiglu", n_layers=2,
+                      d_model=64, n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+                      vocab=100, dtype="float32")
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    # min_dim=32 so the small kv projections (2 kv heads x 16 = 32) qualify
+    specs = csb_specs_for_params(params, CSBSpec(8, 8, 0.5), min_dim=32)
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: x is None or isinstance(x, CSBSpec))
+    chosen = {tuple(getattr(k, "key", str(k)) for k in path)
+              for path, v in flat if isinstance(v, CSBSpec)}
+    names = {p[-1] for p in chosen}
+    assert {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"} <= names
+    # embed/head excluded
+    assert not any("embed" in p or "head" in p for p in names)

@@ -1,0 +1,120 @@
+"""Sharding rules + roofline machinery (no multi-device needed here;
+full-mesh lowering is exercised by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.api import Rules, shard, use_rules
+from repro.dist.rules import ShardingPolicy, param_specs
+from repro.launch.hlo_cost import HloCostModel, analyze
+from repro.launch.roofline import model_flops, parse_collectives, roofline
+from repro.models import abstract_params
+from repro.models.config import SHAPES
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_tree(arch):
+    cfg = get_config(arch)
+    ap = abstract_params(cfg)
+    specs = param_specs(cfg, ap, _FakeMesh(), ShardingPolicy())
+    n_p, n_s = len(jax.tree.leaves(ap)), len(
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_p == n_s
+    # every sharded dim must divide the axis size
+    for leaf, spec in zip(
+            jax.tree.leaves(ap),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax == "model":
+                assert dim % 16 == 0, (arch, leaf.shape, spec)
+
+
+def test_shard_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert shard(x, "residual") is x
+
+
+def test_rules_update():
+    r = Rules({"a": P("data")})
+    r2 = r.updated(b=P("model"))
+    assert r2.get("a") == P("data") and r2.get("b") == P("model")
+
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %g = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %d = f32[128,128]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ar = f32[128,256]{1,0} all-reduce(%g), replica_groups={}
+  ROOT %t = (s32[], f32[128,256]) tuple(%p, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %w = (s32[], f32[128,256]) while(%a), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %r = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_cost_loop_multiplication():
+    c = analyze(HLO)
+    # dot: 2*128*128*256 flops, x10 trips
+    assert c.flops == pytest.approx(2 * 128 * 128 * 256 * 10, rel=0.01)
+    # all-reduce operand: 128*256*4 bytes x10
+    assert c.coll_bytes["all-reduce"] == pytest.approx(
+        128 * 256 * 4 * 10, rel=0.01)
+    assert c.coll_count["all-reduce"] == 10
+
+
+def test_parse_collectives_operand_sizes():
+    stats = parse_collectives(HLO)
+    assert stats.bytes_by_op["all-reduce"] == 128 * 256 * 4
+    assert stats.count_by_op["all-reduce"] == 1
+
+
+def test_roofline_dominance():
+    r = roofline(1e15, 1e9, 1e6, 0.9e15)
+    assert r.dominant == "compute"
+    assert 0.89 <= r.useful_ratio <= 0.91
+    r = roofline(1e9, 1e13, 1e6, 1e9)
+    assert r.dominant == "memory"
+    r = roofline(1e9, 1e9, 1e13, 1e9)
+    assert r.dominant == "collective"
+
+
+def test_model_flops_kinds():
+    cfg = get_config("gemma-2b")
+    tr = model_flops(cfg, SHAPES["train_4k"], 256)
+    pf = model_flops(cfg, SHAPES["prefill_32k"], 256)
+    de = model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert tr == pytest.approx(6 * cfg.param_count() * 4096 * 256 / 256)
+    assert pf == pytest.approx(2 * cfg.param_count() * 32768 * 32 / 256)
+    assert de == pytest.approx(2 * cfg.param_count() * 128 / 256)
+
+
+def test_runnability_matrix():
+    from repro.configs import all_cells, cell_is_runnable
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s in cells if not cell_is_runnable(a, s)]
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_long = [a for a, s in cells
+                     if s == "long_500k" and cell_is_runnable(a, s)]
+    assert sorted(runnable_long) == ["hymba-1.5b", "mamba2-370m"]

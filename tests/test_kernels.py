@@ -1,0 +1,97 @@
+"""Pallas CSB-MVM kernel vs the pure-jnp oracle — shape/dtype sweeps in
+interpret mode (per-kernel allclose deliverable)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSBSpec, csb_masks, csb_project, padded_csb_from_dense
+from repro.kernels.ops import csb_matvec
+from repro.kernels.ref import csb_mvm_ref, densify
+
+
+def make_padded(rng, shape, bm, bn, rate, pad_to=8, dtype=jnp.float32):
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    spec = CSBSpec(bm=bm, bn=bn, prune_rate=rate)
+    z = csb_project(w, spec)
+    rm, cm = csb_masks(w, spec)
+    return padded_csb_from_dense(
+        np.asarray(z), bm, bn, pad_to=pad_to, dtype=dtype,
+        row_mask=np.asarray(rm), col_mask=np.asarray(cm)), np.asarray(z)
+
+
+@pytest.mark.parametrize("shape,bm,bn", [
+    ((32, 32), 16, 16),
+    ((64, 48), 16, 16),
+    ((48, 64), 16, 32),
+    ((128, 96), 32, 32),
+    ((40, 24), 8, 8),      # non-divisible -> padded grid
+])
+@pytest.mark.parametrize("rate", [0.3, 0.75])
+def test_kernel_matches_ref_shapes(rng, shape, bm, bn, rate):
+    p, z = make_padded(rng, shape, bm, bn, rate)
+    x = jnp.asarray(rng.normal(size=(5, shape[1])).astype(np.float32))
+    y_ref = csb_mvm_ref(p, x)
+    y_ker = csb_matvec(p, x)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # and both match the dense masked matmul
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(x) @ z.T,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(rng, dtype):
+    p, z = make_padded(rng, (64, 64), 16, 16, 0.5, dtype=dtype)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)).astype(dtype)
+    y_ref = csb_mvm_ref(p, x)
+    y_ker = csb_matvec(p, x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y_ker, np.float32), np.asarray(y_ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_kernel_batch_shapes(rng):
+    p, _ = make_padded(rng, (48, 32), 16, 16, 0.5)
+    for batch_shape in [(), (1,), (3,), (2, 5)]:
+        x = jnp.asarray(
+            rng.normal(size=(*batch_shape, 32)).astype(np.float32))
+        y = csb_matvec(p, x)
+        assert y.shape == (*batch_shape, 48)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(csb_mvm_ref(p, x)), rtol=1e-5,
+            atol=1e-5)
+
+
+def test_kernel_group_fusion(rng):
+    """group > 1 fuses several blocks per grid step — same results."""
+    p, _ = make_padded(rng, (64, 64), 16, 16, 0.5)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    y1 = csb_matvec(p, x, group=1)
+    y2 = csb_matvec(p, x, group=2)
+    y4 = csb_matvec(p, x, group=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=1e-5)
+
+
+def test_kernel_batch_tiles(rng):
+    p, _ = make_padded(rng, (32, 32), 16, 16, 0.5)
+    x = jnp.asarray(rng.normal(size=(13, 32)).astype(np.float32))
+    for bt in (8, 16):
+        y = csb_matvec(p, x, batch_tile=bt)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(csb_mvm_ref(p, x)), rtol=1e-5,
+            atol=1e-5)
+
+
+def test_empty_blocks(rng):
+    """Blocks fully pruned away (m=0 or n=0) must contribute zero."""
+    z = np.zeros((32, 32), np.float32)
+    z[:16, :16] = rng.normal(size=(16, 16))  # only one block alive
+    p = padded_csb_from_dense(z, 16, 16)
+    x = jnp.asarray(rng.normal(size=(3, 32)).astype(np.float32))
+    y = csb_matvec(p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ z.T,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(densify(p)), z, atol=0)
