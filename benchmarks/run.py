@@ -4,6 +4,11 @@
 # dylib/symbol state over hundreds of compilations and eventually fails
 # with "Failed to materialize symbols" in a long-lived process; process
 # isolation keeps every table reproducible.
+#
+# The ``kernel`` bench additionally lands a machine-readable perf record
+# at benchmarks/results/BENCH_kernel.json so the perf trajectory is
+# tracked across PRs, not just printed.
+import json
 import os
 import subprocess
 import sys
@@ -23,8 +28,34 @@ BENCHES = [
 def _run_inprocess(mod_name: str) -> None:
     import importlib
 
+    import jax
+
+    # metadata row for the coordinator's perf record — describes THIS
+    # worker (the coordinator stays jax-free by design, see header)
+    print(f"_meta/backend,0,{jax.default_backend()}"
+          f"/{jax.devices()[0].device_kind}", flush=True)
     mod = importlib.import_module(f"benchmarks.{mod_name}")
     mod.run()
+
+
+def _perf_record(name: str, rows: list[dict], meta: str,
+                 total_us: float, root: str) -> None:
+    """Land benchmarks/results/BENCH_<name>.json so the perf trajectory
+    is tracked across PRs, not just printed."""
+    out_dir = os.path.join(root, "benchmarks", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    backend, _, device = meta.partition("/")
+    rec = {
+        "bench": name,
+        "backend": backend or "unknown",
+        "device": device or "unknown",
+        "total_us": round(total_us, 1),
+        "rows": rows,
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"{name}/record,0,{os.path.relpath(path, root)}", flush=True)
 
 
 def main() -> None:
@@ -48,16 +79,31 @@ def main() -> None:
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.run", "--worker", mod],
             env=env, cwd=root, capture_output=True, text=True)
+        rows, meta = [], ""
         for line in proc.stdout.splitlines():
-            if line.count(",") >= 2 and not line.startswith("name,"):
-                print(line, flush=True)
+            if line.count(",") < 2 or line.startswith("name,"):
+                continue
+            if line.startswith("_meta/backend,"):
+                meta = line.split(",", 2)[2]
+                continue
+            print(line, flush=True)
+            if name != "kernel":
+                continue
+            rname, us, derived = line.split(",", 2)
+            try:
+                rows.append({"name": rname, "us_per_call": float(us),
+                             "derived": derived})
+            except ValueError:
+                pass
         if proc.returncode != 0:
             failures += 1
             err = proc.stderr.strip().splitlines()
             print(f"{name}/ERROR,0,{err[-1][:160] if err else 'unknown'}",
                   flush=True)
-        print(f"{name}/total,{(time.perf_counter()-t0)*1e6:.0f},done",
-              flush=True)
+        total_us = (time.perf_counter() - t0) * 1e6
+        if name == "kernel" and proc.returncode == 0:
+            _perf_record(name, rows, meta, total_us, root)
+        print(f"{name}/total,{total_us:.0f},done", flush=True)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,74 @@
+"""repro.dist — the sharding subsystem between the CSB kernels and every
+scale path (train, dryrun, serve).
+
+The paper balances structured-sparse work across PEGroups (§5.2); this
+package applies the same idea one level up, balancing block grids and
+dense weights across a JAX device mesh. Model code stays mesh-agnostic:
+it tags activations with *logical names* via ``shard(x, name)``, and the
+launcher decides what (if anything) each name means by installing
+:class:`Rules` with :func:`use_rules`.
+
+API surface
+===========
+
+``api``       — ``shard(x, name)`` context-scoped constraint application,
+                ``Rules`` (logical name -> PartitionSpec, ``.updated()``
+                for overrides), ``use_rules`` context manager (nestable),
+                ``current_rules``, ``fit_spec`` divisibility guard.
+                ``shard`` is the identity outside ``use_rules``, outside
+                a (non-trivial) mesh, for unknown names, and for dims
+                that do not divide their mesh axis.
+``rules``     — ``ShardingPolicy`` (fsdp / seq_shard / shard_cache_seq),
+                ``param_specs`` / ``activation_rules`` / ``batch_specs``
+                / ``cache_specs`` derivation from a ModelConfig + mesh.
+                All of these accept abstract (ShapeDtypeStruct) trees so
+                the dry-run path never allocates.
+``compress``  — int8 error-feedback gradient compression:
+                ``compress_init`` / ``compress`` / ``decompress`` /
+                ``compression_ratio`` with per-leaf scale and residual
+                carry (~4x all-reduce traffic reduction).
+
+Logical-name table (who applies it, and the layout it requests)
+===============================================================
+
+=============  =========================  ===============================
+name           call site                  layout (guarded)
+=============  =========================  ===============================
+residual       lm.layer_apply / embed     (B@dp, S[@model if SP], d)
+logits         lm.lm_loss CE chunks       (B@dp, ck, [K,] V@model)
+kv_cache       lm prefill/init_cache      (B@dp, T@model, KV, D)
+mla_cache      lm prefill/init_cache      (B@dp, T@model, kv_lora)
+attn_q         layers.attn_qkv            (B@dp, S, H@model, D)
+attn_kv        layers.attn_qkv            (B@dp, S, KV@model, D)
+moe_groups     layers.moe_apply           (G@dp, C, d)
+moe_dispatch   layers.moe_apply           (G@dp, C, E@model, cap)
+moe_experts    layers.moe_apply           (G@dp, E@model, cap, d)
+=============  =========================  ===============================
+
+``dp`` is the data axis (or ("pod", "data") on the multi-pod mesh);
+``@model`` entries are dropped per-tensor when the dim does not divide
+the mesh axis size, so reduced CPU configs replicate instead of erroring.
+"""
+from .api import Rules, current_rules, fit_spec, shard, use_rules
+from .compress import (
+    Compressed,
+    compress,
+    compress_init,
+    compression_ratio,
+    decompress,
+)
+from .rules import (
+    ShardingPolicy,
+    activation_rules,
+    batch_specs,
+    cache_specs,
+    param_specs,
+)
+
+__all__ = [
+    "Rules", "current_rules", "fit_spec", "shard", "use_rules",
+    "ShardingPolicy", "activation_rules", "batch_specs", "cache_specs",
+    "param_specs",
+    "Compressed", "compress", "compress_init", "compression_ratio",
+    "decompress",
+]

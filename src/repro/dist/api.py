@@ -1,0 +1,124 @@
+"""Context-scoped sharding-constraint application.
+
+``shard(x, "residual")`` is the single call sites use to pin a logical
+activation to the mesh. Which ``PartitionSpec`` (if any) that name maps
+to is decided by the active :class:`Rules` installed with
+:func:`use_rules` — model code never mentions meshes or axis names, so
+the same forward function serves the single-device CPU tests and the
+production 16x16 pod unchanged.
+
+Outside a ``use_rules`` scope (or inside one whose mesh is trivial)
+``shard`` is the identity, returning its argument object untouched.
+Unknown logical names and dims that do not divide their mesh axis also
+pass through unchanged, so reduced smoke configs never trip a GSPMD
+divisibility error.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Rules:
+    """Immutable mapping: logical activation name -> PartitionSpec.
+
+    Optionally carries the mesh the specs refer to; without a mesh the
+    rules are inert (``shard`` stays the identity), which keeps
+    single-device paths untouched.
+    """
+
+    def __init__(self, table: Mapping[str, P] | None = None, mesh=None):
+        self._table = dict(table or {})
+        self.mesh = mesh
+
+    def get(self, name: str, default: P | None = None) -> P | None:
+        return self._table.get(name, default)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._table
+
+    def items(self):
+        return self._table.items()
+
+    def updated(self, **specs: P) -> "Rules":
+        """A new Rules with the given names added/overridden."""
+        return Rules({**self._table, **specs}, mesh=self.mesh)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Rules({self._table!r}, mesh={self.mesh!r})"
+
+
+_state = threading.local()
+
+
+def current_rules() -> Rules | None:
+    """The innermost active Rules, or None outside any ``use_rules``."""
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Install ``rules`` for the dynamic extent of the block (nestable;
+    exiting restores the outer rules)."""
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append(rules)
+    try:
+        yield rules
+    finally:
+        stack.pop()
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P | None:
+    """Clip ``spec`` to what ``shape`` can actually carry on ``mesh``.
+
+    Drops axis assignments whose dim does not divide the mesh axis size
+    (or that name axes the mesh lacks). Returns None when nothing
+    survives — the caller should skip the constraint entirely.
+    """
+    names = tuple(mesh.axis_names)
+    entries = []
+    any_live = False
+    for i, dim in enumerate(shape):
+        e = spec[i] if i < len(spec) else None
+        if e is None:
+            entries.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        if not all(ax in names for ax in axes):
+            entries.append(None)
+            continue
+        total = math.prod(mesh.shape[ax] for ax in axes)
+        if dim % total != 0:
+            entries.append(None)
+            continue
+        entries.append(e)
+        any_live = any_live or total > 1
+    if not any_live:
+        return None
+    return P(*entries)
+
+
+def shard(x: Any, name: str) -> Any:
+    """Constrain ``x`` to the active rule for ``name`` (identity when no
+    rules/mesh are active, the name is unknown, or no dim fits)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    mesh = rules.mesh
+    if mesh is None or math.prod(mesh.shape.values()) <= 1:
+        return x
+    fitted = fit_spec(spec, x.shape, mesh)
+    if fitted is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))

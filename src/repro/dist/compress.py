@@ -1,0 +1,79 @@
+"""int8 error-feedback gradient compression.
+
+Distributed data parallelism all-reduces full-precision gradients every
+step; at pod scale that traffic competes with the model collectives. The
+classic fix (1-bit SGD / EF-SGD lineage) is to quantize the gradient and
+*carry the quantization error forward*: what round-off drops this step
+is added back into the next step's gradient, so the sum of transmitted
+gradients tracks the sum of true gradients and SGD still converges.
+
+Per leaf: ``scale = max|g + residual| / 127``, values round to int8 on
+that grid, and ``residual`` keeps the difference. All ops are pure
+jax.numpy so the compressor composes with jit/grad and shards like any
+other tree op.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Compressed(NamedTuple):
+    """One quantized leaf: int8 codes + the fp32 grid scale."""
+
+    q: jax.Array       # int8, same shape as the source leaf
+    scale: jax.Array   # fp32 scalar
+
+
+def _is_comp(x) -> bool:
+    return isinstance(x, Compressed)
+
+
+def compress_init(tree: PyTree) -> PyTree:
+    """Zero error-feedback residuals shaped like the gradient tree."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(jnp.shape(g), jnp.float32), tree)
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array):
+    e = jnp.asarray(g, jnp.float32) + r
+    scale = jnp.max(jnp.abs(e)) / 127.0
+    q = jnp.clip(jnp.round(e / jnp.maximum(scale, 1e-30)), -127, 127)
+    q = q.astype(jnp.int8)
+    sent = q.astype(jnp.float32) * scale
+    return Compressed(q, scale), e - sent
+
+
+def compress(grads: PyTree, residual: PyTree):
+    """Returns (compressed_tree, new_residual_tree)."""
+    leaves, tdef = jax.tree.flatten(grads)
+    rleaves, rdef = jax.tree.flatten(residual)
+    if rdef != tdef:
+        raise ValueError(
+            f"residual tree does not match gradient tree (was "
+            f"compress_init run on these params?): {rdef} vs {tdef}")
+    comp, res = [], []
+    for g, r in zip(leaves, rleaves):
+        c, nr = _compress_leaf(g, r)
+        comp.append(c)
+        res.append(nr)
+    return jax.tree.unflatten(tdef, comp), jax.tree.unflatten(tdef, res)
+
+
+def decompress(comp: PyTree) -> PyTree:
+    """Dequantize back to fp32 (the receiver side of the all-reduce)."""
+    return jax.tree.map(
+        lambda c: c.q.astype(jnp.float32) * c.scale, comp, is_leaf=_is_comp)
+
+
+def compression_ratio(tree: PyTree) -> float:
+    """Wire-bytes ratio: original tree vs int8 codes + one fp32 scale
+    per leaf (~4x for fp32 gradients)."""
+    leaves = jax.tree.leaves(tree)
+    orig = sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves)
+    comp = sum(l.size * 1 + 4 for l in leaves)
+    return orig / max(comp, 1)

@@ -1,0 +1,187 @@
+"""Sharding-rule derivation: model/mesh/policy -> PartitionSpec trees.
+
+This is the CSB balancing idea one level up (paper §5.2): instead of
+PEGroups trading cycle quanta, the device mesh trades tensor tiles — and
+just as the engine's scheduler owns the block layout, this module owns
+every spec so train/dryrun/serve agree on one mapping.
+
+Conventions (megatron-style, guarded):
+
+* "model" axis — tensor parallelism. Column-parallel weights (qkv /
+  gate / up / head) shard their output dim; row-parallel weights
+  (``wo``/``w_down``/``w_out``) shard their input dim; embeddings shard
+  the vocab dim; MoE expert tensors shard the expert dim.
+* "data" (+ "pod") axes — batch/FSDP parallelism.
+* Every assignment is divisibility-guarded against the mesh axis size,
+  so reduced smoke configs simply replicate what cannot shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .api import Rules, fit_spec
+
+PyTree = Any
+
+# weights whose *input* dim is model-sharded (their matmul reduces over
+# the sharded dim, putting the all-reduce after the projection)
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+# per-expert MoE tensors: (L, E, in, out) — shard the expert axis
+_EXPERT_WEIGHTS = {"w_gate", "w_up", "w_down"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Per-cell distribution knobs (derived in configs/registry.py).
+
+    fsdp            — additionally shard weights over the data axes
+                      (30B+ models; weights do not fit replicated).
+    seq_shard       — sequence parallelism: residuals shard their seq
+                      dim over "model" (saves activation memory; off for
+                      MoE archs, see registry).
+    shard_cache_seq — decode caches shard their time dim over "model"
+                      (a 32k cache replicated 16x is pure waste; MQA
+                      makes head-sharding impossible, seq always works).
+    """
+
+    fsdp: bool = False
+    seq_shard: bool = False
+    shard_cache_seq: bool = True
+
+
+def _axis_size(mesh, ax) -> int:
+    return mesh.shape[ax] if ax in tuple(mesh.axis_names) else 0
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(ax for ax in mesh.axis_names if ax != "model")
+
+
+def _dp_entry(mesh, batch: int | None = None):
+    """The spec entry for a batch-like dim (None when it cannot shard)."""
+    dp = _dp_axes(mesh)
+    if not dp:
+        return None
+    total = math.prod(mesh.shape[ax] for ax in dp)
+    if batch is not None and batch % max(total, 1) != 0:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _path_keys(path) -> list[str]:
+    return [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
+
+
+def _leaf_spec(path, leaf, mesh, policy: ShardingPolicy) -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    in_layers = bool(keys) and keys[0] == "layers"
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    # effective weight rank ignores the stacked layer axis
+    eff = nd - 1 if in_layers else nd
+
+    entries: list[Any] = [None] * nd
+    model_dim = None
+    if eff >= 2:
+        if name == "embed":
+            model_dim = nd - 2                    # vocab dim
+        elif name in _EXPERT_WEIGHTS and eff >= 3:
+            model_dim = nd - 3                    # expert dim
+        elif name in _ROW_PARALLEL:
+            model_dim = nd - 2                    # input dim
+        else:
+            model_dim = nd - 1                    # output dim
+    if model_dim is not None:
+        msize = _axis_size(mesh, "model")
+        if msize and shape[model_dim] % msize == 0:
+            entries[model_dim] = "model"
+
+    if policy.fsdp and eff >= 2:
+        dsize = _axis_size(mesh, "data")
+        cands = [d for d in range(nd)
+                 if entries[d] is None and not (in_layers and d == 0)]
+        cands.sort(key=lambda d: -shape[d])
+        for d in cands:
+            if dsize and shape[d] % dsize == 0:
+                entries[d] = "data"
+                break
+    return P(*entries)
+
+
+def param_specs(cfg, params: PyTree, mesh, policy: ShardingPolicy) -> PyTree:
+    """PartitionSpec per param leaf (works on arrays or ShapeDtypeStructs,
+    so the dry-run path derives shardings with zero allocation)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh, policy), params)
+
+
+def activation_rules(cfg, mesh, policy: ShardingPolicy, *,
+                     global_batch: int | None = None) -> Rules:
+    """The logical-name table ``models/*`` routes through ``shard()``.
+
+    See repro/dist/__init__.py for the full name -> layout table.
+    """
+    dp = _dp_entry(mesh, global_batch)
+    seq = "model" if policy.seq_shard else None
+    cache_seq = "model" if policy.shard_cache_seq else None
+    if cfg.n_codebooks:
+        logits = P(dp, None, None, "model")       # (B, ck, K, V)
+    else:
+        logits = P(dp, None, "model")             # (B, ck, V)
+    table = {
+        "residual": P(dp, seq, None),             # (B, S, d)
+        "logits": logits,
+        "kv_cache": P(dp, cache_seq, None, None),  # (B, T, KV, D)
+        "mla_cache": P(dp, cache_seq, None),      # (B, T, kv_lora)
+        "attn_q": P(dp, None, "model", None),     # (B, S, H, D)
+        "attn_kv": P(dp, None, "model", None),    # (B, S, KV, D)
+        "moe_groups": P(dp, None, None),          # (G, C, d)
+        "moe_dispatch": P(dp, None, "model", None),  # (G, C, E, cap)
+        "moe_experts": P(dp, "model", None, None),   # (G, E, cap, d)
+    }
+    return Rules(table, mesh=mesh)
+
+
+def batch_specs(cfg, kind: str, mesh, *,
+                global_batch: int | None = None) -> dict[str, P]:
+    """Input-batch shardings per key for a train/prefill/decode step."""
+    dp = _dp_entry(mesh, global_batch)
+    tok = P(dp, None, None) if cfg.n_codebooks else P(dp, None)
+    specs = {"tokens": tok}
+    if kind == "train":
+        specs["labels"] = tok
+    if cfg.n_img_tokens:
+        specs["img_embeds"] = P(dp, None, None)
+    if kind == "decode":
+        specs["pos"] = P()
+    return specs
+
+
+def cache_specs(cfg, cache: PyTree, mesh,
+                policy: ShardingPolicy) -> PyTree:
+    """Decode-cache shardings. Leaves carry a leading stacked-layer axis
+    (always replicated — the decode scan iterates it)."""
+    dp = _dp_entry(mesh)
+    cs = "model" if policy.shard_cache_seq else None
+
+    def one(path, leaf):
+        name = _path_keys(path)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):            # (L, B, T, KV, D)
+            spec = P(None, dp, cs, None, None)
+        elif name in ("c_kv", "k_rope"):  # (L, B, T, lora/rd)
+            spec = P(None, dp, cs, None)
+        elif name == "ssm":               # (L, B, H, P, N)
+            spec = P(None, dp, "model", None, None)
+        else:                             # conv state etc: batch only
+            spec = P(None, dp)
+        fitted = fit_spec(spec, tuple(leaf.shape), mesh)
+        return fitted if fitted is not None else P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -35,6 +35,16 @@ from jax.experimental import pallas as pl
 from repro.core.csb_format import PaddedCSB
 
 
+def default_interpret() -> bool:
+    """Interpret-mode default by backend: TPU compiles the real kernel;
+    everything else interprets. CPU (CI, the container) has no Mosaic
+    target. GPU must stay interpreted too: the kernel accumulates into
+    o_ref across grid axis 2 (pl.when(jc==0) init + read-modify-write),
+    which is only safe under TPU's sequential-grid semantics — Pallas
+    on GPU runs grid programs in parallel and would race on o_ref."""
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(x_ref, vals_ref, ridx_ref, cidx_ref, m_ref, n_ref, o_ref,
             *, bm: int, bn: int, group: int):
     """One grid step: TB batch rows x one block-row x G blocks."""
@@ -99,9 +109,14 @@ def csb_mvm_pallas(
     block: tuple[int, int],
     batch_tile: int = 128,
     group: int = 1,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (B, Br*bm) fp32. ``group`` = blocks fused per grid step."""
+    """Returns (B, Br*bm) fp32. ``group`` = blocks fused per grid step.
+
+    ``interpret=None`` resolves from ``jax.default_backend()``: real
+    accelerators compile the kernel, CPU keeps interpret mode."""
+    if interpret is None:
+        interpret = default_interpret()
     br, bc = grid
     bm, bn = block
     nb, pm, pn = vals.shape

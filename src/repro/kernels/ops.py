@@ -12,11 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csb_format import PaddedCSB
-from .csb_mvm import csb_mvm_pallas
-
-# The container is CPU-only: interpret mode executes the kernel body in
-# Python for correctness. On a real TPU runtime set interpret=False.
-_DEFAULT_INTERPRET = True
+from .csb_mvm import csb_mvm_pallas, default_interpret
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -49,7 +45,7 @@ def csb_matvec(
 ) -> jax.Array:
     """y = x @ W^T for CSB W;  x: (..., in_dim) -> (..., out_dim) fp32."""
     if interpret is None:
-        interpret = _DEFAULT_INTERPRET
+        interpret = default_interpret()
     if group is None:
         group = 1
     batch_shape = x.shape[:-1]

@@ -183,6 +183,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax API drift: older versions return [per-computation dict]
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # loop-aware analysis (XLA's cost_analysis counts scan bodies once)
         from repro.launch.hlo_cost import analyze as hlo_analyze

@@ -1,7 +1,10 @@
 """CSB storage format (paper Fig. 3): round-trip, NIO, padded twin."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (
     CSBMatrix, CSBSpec, csb_masks, csb_project, padded_csb_from_dense,

@@ -3,7 +3,10 @@ variable kernels, idempotence, baselines."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (
     CSBSpec, bank_balanced_project, csb_masks, csb_project, density,

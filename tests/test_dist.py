@@ -48,6 +48,63 @@ def test_rules_update():
     assert r2.get("a") == P("data") and r2.get("b") == P("model")
 
 
+def _tiny_mesh():
+    """A real (trivial) mesh on the single host device."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def test_nested_use_rules_restores_outer():
+    from repro.dist.api import current_rules
+    outer = Rules({"residual": P("data")})
+    inner = Rules({"residual": P("model")})
+    assert current_rules() is None
+    with use_rules(outer):
+        assert current_rules() is outer
+        with use_rules(inner):
+            assert current_rules() is inner
+        assert current_rules() is outer
+    assert current_rules() is None
+
+
+def test_nested_use_rules_restores_on_error():
+    from repro.dist.api import current_rules
+    outer = Rules({"residual": P("data")})
+    with use_rules(outer):
+        with pytest.raises(RuntimeError):
+            with use_rules(Rules({})):
+                raise RuntimeError("boom")
+        assert current_rules() is outer
+    assert current_rules() is None
+
+
+def test_unknown_logical_name_passes_through():
+    x = jnp.ones((4, 4))
+    with use_rules(Rules({"residual": P("data")}, mesh=_tiny_mesh())):
+        assert shard(x, "no_such_name") is x
+
+
+def test_shard_noop_on_trivial_mesh():
+    """A 1x1 mesh must leave single-device paths untouched even when a
+    rule matches — shard returns the identical object."""
+    x = jnp.ones((4, 4))
+    with use_rules(Rules({"residual": P("data", "model")},
+                         mesh=_tiny_mesh())):
+        assert shard(x, "residual") is x
+
+
+def test_fit_spec_divisibility_guard():
+    from repro.dist.api import fit_spec
+    mesh = _FakeMesh()
+    # 40 % 16 != 0 -> model axis dropped; 32 % 16 == 0 -> data kept
+    assert fit_spec(P("data", "model"), (32, 40), mesh) == P("data", None)
+    # nothing divides -> no constraint at all
+    assert fit_spec(P("model"), (7, 7), mesh) is None
+    # unknown mesh axis names are dropped, not an error
+    assert fit_spec(P("expert", "model"), (16, 16), mesh) == P(None, "model")
+
+
 HLO = """
 HloModule test
 

@@ -96,8 +96,26 @@ def test_greedy_conserves_cycles(rng):
         assert int(a.max()) <= int(b.max())
 
 
+def test_greedy_conserves_vs_no_sharing(rng):
+    """Cycle conservation: donated-plus-local cycles per iteration equal
+    the no-sharing total (donations move work, never create/destroy it),
+    and both max and max/mean imbalance are no worse than no-sharing."""
+    csb = _csb(rng, shape=(256, 192), bm=16, bn=16, rate=0.8)
+    K = L = 4
+    base = no_sharing_schedule(csb.m, csb.n, K, L, 4, 4)
+    for mode in ("horizontal", "vertical", "2d"):
+        gre = greedy_schedule(csb.m, csb.n, K, L, 4, 4, mode=mode)
+        assert len(gre.iter_cycles) == len(base.iter_cycles)
+        for g, b in zip(gre.iter_cycles, base.iter_cycles):
+            assert int(g.sum()) == int(b.sum()), mode
+            assert int(g.max()) <= int(b.max()), mode
+            assert g.max() / g.mean() <= b.max() / b.mean() + 1e-9, mode
+        assert gre.total_cycles <= base.total_cycles
+
+
 def test_smt_schedule_fig7_example():
     """A tiny imbalanced 2x2 iteration — SMT must balance within margin."""
+    pytest.importorskip("z3")
     m = np.array([[4, 8], [2, 16]])
     n = np.array([[4, 8], [2, 16]])
     s = smt_schedule(m, n, 2, 2, 4, 4, mode="2d")
@@ -108,6 +126,7 @@ def test_smt_schedule_fig7_example():
 
 
 def test_smt_vs_greedy_balance(rng):
+    pytest.importorskip("z3")
     csb = _csb(rng, shape=(64, 64), bm=16, bn=16, rate=0.7)
     K = L = 2
     gre = greedy_schedule(csb.m, csb.n, K, L, 4, 4, mode="2d")

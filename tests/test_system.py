@@ -69,8 +69,9 @@ def _train_classifier(steps=60, prune_specs=None, seed=0):
 
 
 def test_end_to_end_csb_pipeline():
-    # 1. dense baseline
-    cell, dense_params, acc_fn = _train_classifier()
+    # 1. dense baseline (150 steps: at 60 this jax version's RNG leaves
+    # the GRU under-trained at ~0.47 — threshold unchanged)
+    cell, dense_params, acc_fn = _train_classifier(steps=150)
     dense_acc = acc_fn(dense_params)
     assert dense_acc > 0.5, dense_acc
 
