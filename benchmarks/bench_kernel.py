@@ -43,14 +43,16 @@ def run() -> None:
                 p.true_flops_per_mvm(), 1)
             vb = vmem_bytes(p, batch_tile=8, group=1)
             y_ref, t_ref = timed(lambda: csb_mvm_ref(p, x))
-            y_ker, t_ker = timed(lambda: csb_matvec(p, x))
+            y_ker, t_ker = timed(lambda: csb_matvec(p, x), iters=5,
+                                 reduce="min")
             err = float(jnp.max(jnp.abs(y_ker - y_ref)))
-            emit(f"kernel/b{bm}/r{int(rate*100)}/pad_flop_ratio", t_ker,
-                 f"{pad_ratio:.3f}")
-            emit(f"kernel/b{bm}/r{int(rate*100)}/vmem_kb", 0.0,
-                 f"{vb/1024:.1f}")
-            emit(f"kernel/b{bm}/r{int(rate*100)}/allclose_err", t_ref,
-                 f"{err:.2e}")
+            tag = f"kernel/b{bm}/r{int(rate*100)}"
+            # /mvm is the row benchmarks/diff.py gates on (kernel latency
+            # proper); the oracle/static rows are informational
+            emit(f"{tag}/mvm", t_ker, f"pad_flop_ratio={pad_ratio:.3f}")
+            emit(f"{tag}/pad_flop_ratio", 0.0, f"{pad_ratio:.3f}")
+            emit(f"{tag}/vmem_kb", 0.0, f"{vb/1024:.1f}")
+            emit(f"{tag}/oracle", t_ref, f"allclose_err={err:.2e}")
             assert err < 1e-3
 
 

@@ -1,0 +1,175 @@
+"""Perf-regression diff: fresh BENCH_*.json vs the committed baseline.
+
+``benchmarks/results/baseline/`` holds a committed snapshot of every
+table's record (refreshed with ``--update-baseline``). CI runs the
+benches, then this diff; the job FAILS when a gated table's
+``us_per_call`` regresses more than ``--threshold`` (default 25%)
+after machine-speed normalization.
+
+Cross-machine normalization: absolute timings on a GitHub runner and
+the machine that committed the baseline differ, so raw ratios would
+gate on hardware, not code. Every record carries ``calib_us`` — a
+fixed numpy matmul timed in the same worker process — giving a
+normalized ratio ``(us_fresh / us_base) / (calib_fresh / calib_base)``
+next to the raw one. Calibration itself is noisy on shared runners, so
+a row FAILS only when BOTH ratios exceed the threshold: the raw ratio
+filters out calibration misreads (a scale blip cannot fail CI by
+itself), the normalized ratio filters out genuinely-slower hardware (a
+slow runner cancels out). The one combination this forgives — a
+machine faster than baseline hiding a small true regression — is the
+safe side for a hard CI gate; the diff still prints both ratios. The
+scale factor is clamped to [0.2, 5] so a broken calibration can never
+swing the verdict by more than that.
+
+Only the ``kernel`` table gates by default (--gate), and within a
+gated table only rows matching --gate-row (default "/mvm" — the
+kernel-latency rows; oracle timings and static ratios are
+informational). Rows below --min-us (noise floor) and rows missing
+from either side never gate, they are only reported. Numeric
+``derived`` drifts are reported informationally (pruning rates,
+utilization).
+
+Usage:
+  python benchmarks/diff.py                    # diff + gate, exit 1 on fail
+  python benchmarks/diff.py --threshold 0.5
+  python benchmarks/diff.py --update-baseline  # bless fresh as baseline
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "benchmarks", "results")
+BASELINE = os.path.join(RESULTS, "baseline")
+
+
+def _load(dir_: str) -> dict[str, dict]:
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        recs[rec.get("bench", os.path.basename(path))] = rec
+    return recs
+
+
+def _rows_by_name(rec: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in rec.get("rows", [])}
+
+
+def diff_records(fresh: dict[str, dict], base: dict[str, dict],
+                 threshold: float, gate_tables: set[str],
+                 min_us: float,
+                 gate_row: str = "/mvm") -> tuple[list[str], list[str]]:
+    """Returns (report lines, gate failures)."""
+    lines: list[str] = []
+    failures: list[str] = []
+    for name in sorted(set(fresh) | set(base)):
+        if name not in base:
+            lines.append(f"  [new]     {name}: no baseline record")
+            continue
+        if name not in fresh:
+            lines.append(f"  [missing] {name}: baseline has it, "
+                         "fresh run does not")
+            continue
+        f_rec, b_rec = fresh[name], base[name]
+        calib_f = float(f_rec.get("calib_us") or 0.0)
+        calib_b = float(b_rec.get("calib_us") or 0.0)
+        scale = (calib_f / calib_b) if calib_f > 0 and calib_b > 0 else 1.0
+        scale = min(max(scale, 0.2), 5.0)
+        gated = name in gate_tables
+        lines.append(f"table {name}  (machine scale x{scale:.2f}, "
+                     f"{'GATED' if gated else 'informational'})")
+        f_rows, b_rows = _rows_by_name(f_rec), _rows_by_name(b_rec)
+        for rname in sorted(set(f_rows) | set(b_rows)):
+            if rname not in b_rows or rname not in f_rows:
+                tag = "new" if rname not in b_rows else "gone"
+                lines.append(f"  [{tag}] {rname}")
+                continue
+            fr, br = f_rows[rname], b_rows[rname]
+            fu, bu = float(fr["us_per_call"]), float(br["us_per_call"])
+            if bu > 0 and fu > 0:
+                raw = fu / bu
+                norm = raw / scale
+                delta = (norm - 1.0) * 100
+                mark = ""
+                row_gates = gated and (not gate_row or gate_row in rname)
+                # both ratios must regress: raw-only = calibration blip,
+                # normalized-only = slower machine (see module docstring)
+                if (row_gates and fu >= min_us
+                        and min(raw, norm) > 1 + threshold):
+                    mark = "  << REGRESSION"
+                    failures.append(
+                        f"{rname}: {bu:.1f}us -> {fu:.1f}us "
+                        f"({raw:.2f}x raw, {norm:.2f}x normalized, "
+                        f"threshold {1 + threshold:.2f}x)")
+                if abs(delta) > 5 or mark:
+                    lines.append(f"  {rname}: {bu:.1f} -> {fu:.1f} us "
+                                 f"({raw:.2f}x raw, {delta:+.0f}% "
+                                 f"norm){mark}")
+            fd, bd = fr.get("derived"), br.get("derived")
+            if (isinstance(fd, (int, float)) and isinstance(bd, (int, float))
+                    and bd != 0 and abs(fd / bd - 1) > 0.05):
+                lines.append(f"  {rname}: derived {bd} -> {fd}")
+    return lines, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=RESULTS)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("DIFF_THRESHOLD", 0.25)),
+                    help="gated relative regression, 0.25 = +25%%")
+    ap.add_argument("--gate", default="kernel",
+                    help="comma list of tables whose us_per_call gates")
+    ap.add_argument("--gate-row", default="/mvm",
+                    help="substring a row name must contain to gate "
+                         "(empty = every row of a gated table)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="rows faster than this never gate (noise floor)")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+
+    fresh = _load(args.fresh)
+    if not fresh:
+        print(f"no BENCH_*.json under {args.fresh} — run "
+              "`python benchmarks/run.py` first")
+        return 1
+
+    if args.update_baseline:
+        os.makedirs(args.baseline, exist_ok=True)
+        for path in glob.glob(os.path.join(args.fresh, "BENCH_*.json")):
+            shutil.copy(path, args.baseline)
+            print(f"blessed {os.path.basename(path)}")
+        return 0
+
+    base = _load(args.baseline)
+    if not base:
+        print(f"no committed baseline under {args.baseline} — "
+              "informational run only (use --update-baseline to create)")
+        return 0
+
+    gate_tables = {t for t in args.gate.split(",") if t}
+    lines, failures = diff_records(fresh, base, args.threshold,
+                                   gate_tables, args.min_us,
+                                   gate_row=args.gate_row)
+    print("## Benchmark diff vs committed baseline")
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} regression(s) "
+              f"> {args.threshold * 100:.0f}% normalized):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

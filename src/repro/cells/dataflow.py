@@ -6,8 +6,10 @@ by Li-GRU/GRU). The same graph object serves three consumers:
 
 1. the **executor** (`cell_apply`) — a small interpreter that traces the
    DAG into a jaxpr, so every cell type runs on one code path (the paper's
-   "programmable datapath"). MVM weights may be dense arrays *or*
-   `PaddedCSB` matrices, in which case the Pallas CSB kernel is used;
+   "programmable datapath"). MVM weights may be dense arrays, `PaddedCSB`
+   matrices (Pallas CSB kernel), or device-stacked `ShardedCSB` shards
+   (mesh-sharded kernel; requires an active `use_rules` mesh with a
+   non-trivial "model" axis — see `dist.csb_partition`);
 2. the **macro-instruction compiler** (`engine/isa.py`) — list-schedules
    the DAG into VLIW words, reproducing §5.1.2;
 3. the **latency model** (`engine/simulator.py`).
@@ -21,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csb_format import PaddedCSB
+from repro.core.csb_format import PaddedCSB, ShardedCSB
 
 KINDS = ("input", "mvm", "bias", "add", "mul",
          "sigmoid", "tanh", "relu", "one_minus")
@@ -138,6 +140,15 @@ class GraphBuilder:
 # ---------------------------------------------------------------------------
 
 def _apply_mvm(w, x: jax.Array) -> jax.Array:
+    if isinstance(w, ShardedCSB):
+        from repro.core.csb_linear import _active_model_mesh
+        from repro.kernels.csb_sharded import csb_matvec_sharded
+        mesh = _active_model_mesh()
+        if mesh is None:
+            raise ValueError(
+                "ShardedCSB cell weight needs an active use_rules scope "
+                "whose mesh has a non-trivial 'model' axis")
+        return csb_matvec_sharded(w, x, mesh=mesh).astype(x.dtype)
     if isinstance(w, PaddedCSB):
         from repro.kernels.ops import csb_matvec
         return csb_matvec(w, x).astype(x.dtype)

@@ -3,7 +3,7 @@
 Public surface:
   CSBSpec, csb_project, csb_masks, kernel_sizes    (projection, Alg. 1 inner)
   magnitude_project, bank_balanced_project, row_column_project  (baselines)
-  CSBMatrix, PaddedCSB, padded_csb_from_dense      (formats, Fig. 3)
+  CSBMatrix, PaddedCSB, ShardedCSB, padded_csb_from_dense  (formats, Fig. 3)
   ADMMState, admm_init/penalty/update/finalize     (Eqns. 2-6)
   ProgressivePruner                                (Alg. 1 outer loop)
 """
@@ -20,7 +20,9 @@ from .pruning import (
     row_column_project,
     to_blocks,
 )
-from .csb_format import CSBMatrix, PaddedCSB, padded_csb_from_dense
+from .csb_format import (
+    CSBMatrix, PaddedCSB, ShardedCSB, padded_csb_from_dense,
+)
 from .admm import (
     ADMMState,
     admm_finalize,
@@ -37,7 +39,7 @@ __all__ = [
     "CSBSpec", "csb_project", "csb_masks", "kernel_sizes", "density",
     "element_mask", "to_blocks", "from_blocks",
     "magnitude_project", "bank_balanced_project", "row_column_project",
-    "CSBMatrix", "PaddedCSB", "padded_csb_from_dense",
+    "CSBMatrix", "PaddedCSB", "ShardedCSB", "padded_csb_from_dense",
     "ADMMState", "admm_init", "admm_penalty", "admm_update",
     "admm_finalize", "residual_norm", "spec_tree_map",
     "ProgressivePruner", "ProgressiveState",

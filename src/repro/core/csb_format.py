@@ -222,6 +222,112 @@ class PaddedCSB:
     def true_flops_per_mvm(self) -> int:
         return int(2 * jnp.sum(self.m.astype(jnp.int64) * self.n))
 
+    # -- device sharding (mesh-level balancing, paper §5.2 lifted) ----------
+    def split_block_rows(
+        self, assignment: Sequence[Sequence[int]]
+    ) -> "ShardedCSB":
+        """Split the block grid over devices by BLOCK-ROW.
+
+        ``assignment[d]`` lists the global block-row ids device ``d``
+        owns (an arbitrary partition of ``range(Br)`` — the planner in
+        ``repro.dist.csb_partition`` picks it by cycle cost). Devices
+        with fewer rows are padded with empty rows (``m = n = 0``
+        blocks, which the kernel masks to zero), so every device shard
+        has identical shape and the stack can be laid out with a plain
+        leading-axis PartitionSpec.
+        """
+        br, bc = self.grid
+        n_dev = len(assignment)
+        flat = sorted(r for rows in assignment for r in rows)
+        if flat != list(range(br)):
+            raise ValueError(
+                f"assignment must partition range({br}), got {assignment}")
+        rpd = max((len(rows) for rows in assignment), default=0)
+        rpd = max(rpd, 1)
+        gather = np.zeros((n_dev, rpd), np.int32)
+        valid = np.zeros((n_dev, rpd), bool)
+        for d, rows in enumerate(assignment):
+            gather[d, : len(rows)] = rows
+            valid[d, : len(rows)] = True
+
+        pm, pn = self.pm, self.pn
+        vals4 = self.vals.reshape(br, bc, pm, pn)
+        ridx3 = self.row_idx.reshape(br, bc, pm)
+        cidx3 = self.col_idx.reshape(br, bc, pn)
+        m2 = self.m.reshape(br, bc)
+        n2 = self.n.reshape(br, bc)
+        g = jnp.asarray(gather)
+        v = jnp.asarray(valid)
+        live = v[:, :, None]                               # (D, R, 1)
+        return ShardedCSB(
+            vals=vals4[g].reshape(n_dev, rpd * bc, pm, pn),
+            row_idx=ridx3[g].reshape(n_dev, rpd * bc, pm),
+            col_idx=cidx3[g].reshape(n_dev, rpd * bc, pn),
+            m=jnp.where(live, m2[g], 0).reshape(n_dev, rpd * bc),
+            n=jnp.where(live, n2[g], 0).reshape(n_dev, rpd * bc),
+            shape=self.shape, grid=self.grid, block=self.block,
+            row_map=tuple(tuple(rows) for rows in assignment),
+        )
+
+
+@_register_pytree
+@dataclasses.dataclass
+class ShardedCSB:
+    """A ``PaddedCSB`` split over devices by block-row (shard metadata
+    view): every array gains a leading device axis sized ``n_dev``, and
+    ``row_map`` records which global block-rows each device owns (in
+    local-slot order) so outputs can be permuted back after the
+    all-gather. Built via :meth:`PaddedCSB.split_block_rows`; consumed
+    by ``repro.kernels.csb_sharded.csb_matvec_sharded``.
+    """
+
+    vals: jax.Array = _leaf()       # (D, R*Bc, Pm, Pn)
+    row_idx: jax.Array = _leaf()    # (D, R*Bc, Pm)
+    col_idx: jax.Array = _leaf()    # (D, R*Bc, Pn)
+    m: jax.Array = _leaf()          # (D, R*Bc) — 0 on pad rows
+    n: jax.Array = _leaf()          # (D, R*Bc)
+    shape: tuple[int, int] = dataclasses.field(default=(0, 0))
+    grid: tuple[int, int] = dataclasses.field(default=(0, 0))
+    block: tuple[int, int] = dataclasses.field(default=(0, 0))
+    # per-device global block-row ids, local-slot order (hashable aux data)
+    row_map: tuple[tuple[int, ...], ...] = dataclasses.field(default=())
+
+    @property
+    def n_dev(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def rows_per_dev(self) -> int:
+        return self.vals.shape[1] // self.grid[1]
+
+    @property
+    def pm(self) -> int:
+        return self.vals.shape[-2]
+
+    @property
+    def pn(self) -> int:
+        return self.vals.shape[-1]
+
+    def output_permutation(self) -> np.ndarray:
+        """``perm`` s.t. ``y_global[:, i] = y_gathered[:, perm[i]]`` where
+        ``y_gathered`` concatenates per-device outputs (pad rows
+        included) in device order."""
+        return csb_output_permutation(
+            self.row_map, self.rows_per_dev, self.block[0], self.grid[0])
+
+
+def csb_output_permutation(row_map, rows_per_dev: int, bm: int,
+                           br: int) -> np.ndarray:
+    """Gather-order -> block-row-order output permutation (see
+    :meth:`ShardedCSB.output_permutation`; standalone so the kernel's
+    jit-cache can rebuild it from hashable statics alone)."""
+    perm = np.zeros(br * bm, np.int64)
+    for d, rows in enumerate(row_map):
+        for s, r in enumerate(rows):
+            src = (d * rows_per_dev + s) * bm
+            perm[r * bm: (r + 1) * bm] = np.arange(src, src + bm)
+    return perm
+
 
 def padded_csb_from_dense(
     w, bm: int, bn: int, pad_to: int = 8, dtype=jnp.float32,

@@ -5,7 +5,12 @@ Modes:
   dense   — plain matmul (training before pruning starts)
   masked  — dense matmul against the CSB-projected weight (ADMM training:
             the projection is the Z-update; the mask is free under jit)
-  csb     — the PaddedCSB format through the Pallas kernel (serving)
+  csb     — the PaddedCSB format through the Pallas kernel (serving).
+            When a mesh with a non-trivial "model" axis is active (see
+            ``models.layers.csb_dense``), the block grid is partitioned
+            over that axis by cycle cost (``dist.csb_partition``) and
+            executed via ``csb_matvec_sharded``; ``shard_for_mesh``
+            builds and caches the per-mesh ``ShardedCSB``.
 
 `csb_specs_for_params` builds the spec tree that repro.train's ADMM hooks
 consume, selecting every >= min_dim 2-D/stacked-3-D projection of a model.
@@ -25,6 +30,18 @@ from .pruning import CSBSpec, csb_masks, csb_project
 PyTree = Any
 
 
+def _active_model_mesh(axis: str = "model"):
+    """The mesh from the active ``dist`` Rules when its ``axis`` is
+    non-trivial — the signal that the sharded CSB path should run.
+    None on single-device paths, so tests/CPU stay on the local kernel."""
+    from repro.dist.api import current_rules
+    rules = current_rules()
+    mesh = getattr(rules, "mesh", None)
+    if mesh is None or axis not in tuple(mesh.axis_names):
+        return None
+    return mesh if mesh.shape[axis] > 1 else None
+
+
 @dataclasses.dataclass
 class CSBLinear:
     """Stateful wrapper around one projection weight."""
@@ -34,6 +51,9 @@ class CSBLinear:
     mode: str = "dense"                  # dense | masked | csb
     transposed: bool = False             # True if weight is (in, out)
     _packed: PaddedCSB | None = None
+    # (n_dev, axis) -> (PartitionPlan, ShardedCSB); host-side cache so the
+    # greedy placement runs once per mesh width, not once per call
+    _shards: dict = dataclasses.field(default_factory=dict)
 
     def _w_oi(self) -> jax.Array:
         return self.weight.T if self.transposed else self.weight
@@ -45,7 +65,21 @@ class CSBLinear:
         packed = padded_csb_from_dense(
             w, self.spec.bm, self.spec.bn, pad_to=pad_to,
             row_mask=np.asarray(rm), col_mask=np.asarray(cm))
-        return dataclasses.replace(self, mode="csb", _packed=packed)
+        # fresh shard cache: replace() would alias the dict, and cached
+        # shards of the previous packing must not survive a re-freeze
+        return dataclasses.replace(self, mode="csb", _packed=packed,
+                                   _shards={})
+
+    def shard_for_mesh(self, mesh, axis: str = "model"):
+        """(plan, ShardedCSB) for this weight on ``mesh[axis]``, cycle-
+        balanced by the greedy planner and cached per mesh width."""
+        assert self._packed is not None, "call freeze() first"
+        from repro.dist.csb_partition import partition_padded
+        n_dev = mesh.shape[axis]
+        key = (n_dev, axis)
+        if key not in self._shards:
+            self._shards[key] = partition_padded(self._packed, n_dev)
+        return self._shards[key]
 
     def __call__(self, x: jax.Array) -> jax.Array:
         if self.mode == "dense":
@@ -53,8 +87,14 @@ class CSBLinear:
         elif self.mode == "masked":
             w = csb_project(self._w_oi(), self.spec)
         elif self.mode == "csb":
-            from repro.kernels.ops import csb_matvec
             assert self._packed is not None, "call freeze() first"
+            mesh = _active_model_mesh()
+            if mesh is not None:
+                from repro.kernels.csb_sharded import csb_matvec_sharded
+                _, sharded = self.shard_for_mesh(mesh)
+                return csb_matvec_sharded(
+                    sharded, x, mesh=mesh).astype(x.dtype)
+            from repro.kernels.ops import csb_matvec
             return csb_matvec(self._packed, x).astype(x.dtype)
         else:  # pragma: no cover
             raise ValueError(self.mode)

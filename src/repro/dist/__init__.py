@@ -27,6 +27,14 @@ API surface
                 ``compress_init`` / ``compress`` / ``decompress`` /
                 ``compression_ratio`` with per-leaf scale and residual
                 carry (~4x all-reduce traffic reduction).
+``csb_partition`` — mesh-aware CSB block partitioning (paper §5.2
+                across chips): ``block_row_cycles`` engine cost model,
+                ``plan_block_rows`` greedy (LPT + ring donation) or
+                equal placement, ``partition_padded`` producing the
+                device-stacked ``ShardedCSB`` that
+                ``kernels.csb_sharded.csb_matvec_sharded`` executes;
+                ``csb_shard_specs`` (in ``rules``) derives the matching
+                PartitionSpecs alongside the dense ``param_specs``.
 
 Logical-name table (who applies it, and the layout it requests)
 ===============================================================
@@ -57,18 +65,27 @@ from .compress import (
     compression_ratio,
     decompress,
 )
+from .csb_partition import (
+    PartitionPlan,
+    block_row_cycles,
+    partition_padded,
+    plan_block_rows,
+)
 from .rules import (
     ShardingPolicy,
     activation_rules,
     batch_specs,
     cache_specs,
+    csb_shard_specs,
     param_specs,
 )
 
 __all__ = [
     "Rules", "current_rules", "fit_spec", "shard", "use_rules",
     "ShardingPolicy", "activation_rules", "batch_specs", "cache_specs",
-    "param_specs",
+    "csb_shard_specs", "param_specs",
+    "PartitionPlan", "block_row_cycles", "partition_padded",
+    "plan_block_rows",
     "Compressed", "compress", "compress_init", "compression_ratio",
     "decompress",
 ]

@@ -148,6 +148,48 @@ def activation_rules(cfg, mesh, policy: ShardingPolicy, *,
     return Rules(table, mesh=mesh)
 
 
+def csb_shard_specs(obj: Any, mesh, *, axis: str = "model") -> Any:
+    """PartitionSpec tree for CSB weights, derived alongside the dense
+    ``param_specs`` (same guards, same "model" axis).
+
+    ``ShardedCSB`` leaves (device-stacked by ``dist.csb_partition``)
+    shard their leading device axis over ``axis`` when the split width
+    matches the mesh; anything that cannot shard — an unsplit
+    ``PaddedCSB``, or a split whose device count mismatches — is fully
+    replicated, mirroring the divisibility guards above. Returns a
+    structure-matched tree of PartitionSpecs (works on whole param
+    trees via ``tree_map`` with CSB containers as leaves).
+    """
+    from repro.core.csb_format import PaddedCSB, ShardedCSB
+
+    def one(path, leaf):
+        if isinstance(leaf, ShardedCSB):
+            ok = _axis_size(mesh, axis) == leaf.n_dev and leaf.n_dev > 1
+            lead = axis if ok else None
+            return ShardedCSB(
+                vals=P(lead, None, None, None),
+                row_idx=P(lead, None, None),
+                col_idx=P(lead, None, None),
+                m=P(lead, None), n=P(lead, None),
+                shape=leaf.shape, grid=leaf.grid, block=leaf.block,
+                row_map=leaf.row_map,
+            )
+        if isinstance(leaf, PaddedCSB):
+            return PaddedCSB(
+                vals=P(None, None, None), row_idx=P(None, None),
+                col_idx=P(None, None), m=P(None), n=P(None),
+                shape=leaf.shape, grid=leaf.grid, block=leaf.block,
+            )
+        return _leaf_spec(path, leaf, mesh, ShardingPolicy())
+
+    def is_csb(x):
+        return isinstance(x, (PaddedCSB, ShardedCSB))
+
+    if is_csb(obj):
+        return one((), obj)
+    return jax.tree_util.tree_map_with_path(one, obj, is_leaf=is_csb)
+
+
 def batch_specs(cfg, kind: str, mesh, *,
                 global_batch: int | None = None) -> dict[str, P]:
     """Input-batch shardings per key for a train/prefill/decode step."""

@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# CSB-RNN's hot spot IS a custom kernel (the CSB-Engine): csb_mvm.py
+# holds the Pallas TPU kernel, ops.py the padded public wrapper,
+# csb_sharded.py the mesh-sharded entry point, ref.py the jnp oracle.
+from .csb_mvm import csb_mvm_pallas, default_interpret
+from .csb_sharded import csb_matvec_sharded
+from .ops import csb_matvec
+
+__all__ = ["csb_matvec", "csb_matvec_sharded", "csb_mvm_pallas",
+           "default_interpret"]

@@ -27,6 +27,7 @@ output tile (minor-most, so the compiler keeps the accumulator resident).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +36,38 @@ from jax.experimental import pallas as pl
 from repro.core.csb_format import PaddedCSB
 
 
+def _tpu_interpret_available() -> bool:
+    """Does this jax expose ``pltpu.force_tpu_interpret_mode``? (landed
+    after 0.4.37; the CI golden lane installs a jax that has it)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover
+        return False
+    return hasattr(pltpu, "force_tpu_interpret_mode")
+
+
+def force_tpu_interpret_requested() -> bool:
+    """The CI golden lane sets REPRO_FORCE_TPU_INTERPRET=1 so the
+    compiled-path branch below is exercised on CPU runners under
+    ``pltpu.force_tpu_interpret_mode`` (tests/conftest.py enters it)."""
+    return os.environ.get("REPRO_FORCE_TPU_INTERPRET", "0") not in ("", "0")
+
+
 def default_interpret() -> bool:
     """Interpret-mode default by backend: TPU compiles the real kernel;
     everything else interprets. CPU (CI, the container) has no Mosaic
     target. GPU must stay interpreted too: the kernel accumulates into
     o_ref across grid axis 2 (pl.when(jc==0) init + read-modify-write),
     which is only safe under TPU's sequential-grid semantics — Pallas
-    on GPU runs grid programs in parallel and would race on o_ref."""
+    on GPU runs grid programs in parallel and would race on o_ref.
+
+    Under REPRO_FORCE_TPU_INTERPRET the TPU branch (interpret=False) is
+    taken on CPU too, relying on ``force_tpu_interpret_mode`` to emulate
+    the Mosaic lowering — the golden lane for the compiled path. On a
+    jax too old to have that context manager we stay interpreted rather
+    than fail to lower."""
+    if force_tpu_interpret_requested() and _tpu_interpret_available():
+        return False
     return jax.default_backend() != "tpu"
 
 

@@ -1,0 +1,135 @@
+"""Mesh-sharded CSB matvec: per-device Pallas kernels + output all-gather.
+
+``csb_matvec_sharded(s, x, mesh=...)`` runs the CSB-MVM kernel on each
+device's local block-row shard (a ``ShardedCSB`` built by
+``repro.dist.csb_partition``) under ``shard_map``, all-gathers the
+per-device output rows along the mesh "model" axis, and permutes the
+gathered rows back to the original block-row order (the planner
+assigns rows by cycle cost, not contiguously).
+
+Device placement quality is the planner's job; this wrapper executes
+whatever ``row_map`` it is handed, exactly as ``csb_mvm_pallas``
+executes whatever block layout the engine scheduler chose. Pad rows
+(devices with fewer block-rows than the max) carry ``m = n = 0`` and
+the kernel masks them to zero, so they cost one grid step but never
+corrupt the gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.csb_format import ShardedCSB, csb_output_permutation
+from .csb_mvm import csb_mvm_pallas, default_interpret
+from .ops import pad_to_grid
+
+try:                                      # jax >= 0.6: top-level API
+    from jax import shard_map as _shard_map
+except ImportError:                       # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shmap(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: pallas_call has no replication
+    rule, so the check must be off — the knob is ``check_rep`` on older
+    jax and ``check_vma`` after the rename."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(mesh, axis_name: str, grid: tuple[int, int],
+                block: tuple[int, int], rpd: int,
+                row_map: tuple[tuple[int, ...], ...],
+                batch_tile: int, group: int, interpret: bool):
+    """Jitted (shards..., xp) -> gathered-and-unpermuted output, cached
+    per static configuration — the sharded twin of ops._run's jit cache,
+    so eager serving loops don't re-trace the kernel every call."""
+    br, bc = grid
+    bm, bn = block
+    spec1 = P(axis_name)
+    # batch stays sharded over the non-model axes (data parallelism is
+    # orthogonal to the block-row split); only the feature/row dims are
+    # replicated along the model axis
+    dp = tuple(ax for ax in mesh.axis_names if ax != axis_name)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    xspec = P(dp_entry, None)
+
+    # perm: original output row -> position in the device-order gather
+    perm = csb_output_permutation(row_map, rpd, bm, br)
+
+    def body(vals, ridx, cidx, m, n, xl):
+        # local shard: leading device axis is 1 here — squeeze it
+        y = csb_mvm_pallas(
+            vals[0], ridx[0], cidx[0], m[0], n[0], xl,
+            grid=(rpd, bc), block=(bm, bn), batch_tile=batch_tile,
+            group=group, interpret=interpret,
+        )                                            # (Bp, rpd*bm)
+        return jax.lax.all_gather(y, axis_name, axis=1, tiled=True)
+
+    shmapped = _shmap(
+        body, mesh,
+        in_specs=(spec1, spec1, spec1, spec1, spec1, xspec),
+        out_specs=xspec,
+    )
+
+    def fn(vals, ridx, cidx, m, n, xp):
+        y = shmapped(vals, ridx, cidx, m, n, xp)      # (Bp, D*rpd*bm)
+        return jnp.take(y, jnp.asarray(perm), axis=1)
+    return jax.jit(fn)
+
+
+def csb_matvec_sharded(
+    s: ShardedCSB,
+    x: jax.Array,
+    *,
+    mesh,
+    axis_name: str = "model",
+    batch_tile: int = 8,
+    group: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = x @ W^T with W's block-rows spread over ``mesh[axis_name]``.
+
+    ``x``: (..., in_dim), replicated along the model axis (the paper's
+    MVM input vector is broadcast to every PEGroup; same here, one
+    level up) while the flattened batch dim stays sharded over the
+    remaining (data) axes. Returns (..., out_dim) fp32, model-axis
+    replicated, batch laid out as the input was.
+    """
+    if axis_name not in tuple(mesh.axis_names):
+        raise ValueError(f"mesh has no axis {axis_name!r}: "
+                         f"{tuple(mesh.axis_names)}")
+    if mesh.shape[axis_name] != s.n_dev:
+        raise ValueError(
+            f"ShardedCSB was split for {s.n_dev} devices but mesh axis "
+            f"{axis_name!r} has {mesh.shape[axis_name]}")
+    if interpret is None:
+        interpret = default_interpret()
+    if group is None:
+        group = 1
+
+    bc = s.grid[1]
+    bn = s.block[1]
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = x2.shape[0]
+    # pad so every data-axis shard is a whole number of batch tiles
+    dp_total = mesh.size // mesh.shape[axis_name]
+    xp = pad_to_grid(x2, batch_tile * dp_total, bc * bn)
+
+    fn = _sharded_fn(mesh, axis_name, s.grid, s.block, s.rows_per_dev,
+                     s.row_map, batch_tile, group, interpret)
+    y = fn(s.vals, s.row_idx, s.col_idx, s.m, s.n, xp)
+    y = y[:b, : s.shape[0]]
+    return y.reshape(*batch_shape, s.shape[0])
+
+
+__all__ = ["csb_matvec_sharded"]

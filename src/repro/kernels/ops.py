@@ -19,14 +19,23 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def pad_to_grid(x2: jax.Array, batch_tile: int, in_cols: int) -> jax.Array:
+    """Pad a flattened (B, in_dim) batch to the kernel's tile grid:
+    batch up to a batch_tile multiple, features up to the block grid's
+    ``Bc * bn`` columns. Shared by the local and sharded entry points
+    so their padding rules cannot diverge."""
+    b = x2.shape[0]
+    bp = _round_up(max(b, 1), batch_tile)
+    return jnp.pad(x2, ((0, bp - b), (0, in_cols - x2.shape[-1])))
+
+
 @functools.partial(jax.jit, static_argnames=("batch_tile", "group", "interpret"))
 def _run(p: PaddedCSB, x2: jax.Array, batch_tile: int, group: int,
          interpret: bool) -> jax.Array:
     br, bc = p.grid
     bm, bn = p.block
-    b, in_dim = x2.shape
-    bp = _round_up(max(b, 1), batch_tile)
-    xp = jnp.pad(x2, ((0, bp - b), (0, bc * bn - in_dim)))
+    b = x2.shape[0]
+    xp = pad_to_grid(x2, batch_tile, bc * bn)
     y = csb_mvm_pallas(
         p.vals, p.row_idx, p.col_idx, p.m, p.n, xp,
         grid=p.grid, block=p.block, batch_tile=batch_tile, group=group,

@@ -31,6 +31,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (
@@ -153,6 +154,54 @@ def build_cell(arch: str, shape_name: str, mesh, extra_over=None,
     return serve_step, args, in_sh, (1,), rules, cfg
 
 
+def csb_partition_report(cfg, mesh, bm: int = 64) -> dict:
+    """Per-device cycle-balance the CSB block partitioner achieves on
+    this cell's mesh (paper §5.2 lifted to chips).
+
+    The cell's own weights are dense ShapeDtypeStructs (nothing is
+    allocated in a dry run), so the block survivor grid is synthesized
+    to the paper's skew profile deterministically per arch: stacked
+    gate bands with very different survivor densities (pruned LSTM
+    gates keep wildly different fractions — the workload variance of
+    Fig. 7b) plus a dense diagonal band (§6.3.2). Reported: greedy vs
+    naive-equal max/mean imbalance over the "model" axis, the quantity
+    the sharded kernel's critical path follows.
+    """
+    from repro.dist.csb_partition import block_row_cycles, plan_block_rows
+
+    n_dev = int(mesh.shape["model"])
+    d = int(cfg.d_model)
+    # refine blocks until each device owns >= 4 block-rows — with fewer
+    # the placement has no freedom and any policy hits the single-row
+    # imbalance floor
+    while bm > 8 and d // bm < 4 * n_dev:
+        bm //= 2
+    br = bc = max(d // bm, n_dev)
+    rng = np.random.default_rng(d * 31 + bm)
+    # per-row survivor fraction: 4 gate bands (dense -> heavily pruned),
+    # lognormal jitter within a band
+    gate = np.array([1.0, 0.45, 0.2, 0.1])[
+        (np.arange(br) * 4) // br]                       # (Br,)
+    frac = np.clip(gate * rng.lognormal(0.0, 0.25, br), 4 / bm, 1.0)
+    m = np.clip((frac[:, None] * bm
+                 * rng.uniform(0.7, 1.3, (br, bc))).astype(np.int64),
+                2, bm)
+    n = np.clip(rng.integers(bm // 4, bm // 2, size=(br, bc)), 2, bm)
+    band = np.abs(np.arange(br)[:, None] - np.arange(bc)[None, :]) <= 1
+    m = np.where(band, bm, m)
+    n = np.where(band, bm, n)
+    cyc = block_row_cycles((m, n))
+    greedy = plan_block_rows(cyc, n_dev, policy="greedy")
+    equal = plan_block_rows(cyc, n_dev, policy="equal")
+    return {
+        "block": bm, "grid": [int(br), int(bc)], "model_devices": n_dev,
+        "greedy": greedy.as_dict(), "equal": equal.as_dict(),
+        "speedup_vs_equal": round(
+            max(equal.device_cycles) / max(max(greedy.device_cycles), 1),
+            3),
+    }
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              extra_over=None, policy=None, save: bool = True,
              tag: str = "") -> dict:
@@ -231,6 +280,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "total_bytes": lc.collective_total,
             },
             "roofline": rl.as_dict(),
+            "csb_partition": csb_partition_report(cfg, mesh),
             "params": cfg.param_count(),
             "active_params": cfg.active_param_count(),
         })

@@ -41,6 +41,21 @@ def dense(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
 
 
+def csb_dense(x: jax.Array, lin) -> jax.Array:
+    """A projection through a ``core.CSBLinear`` — the CSB-pruned twin
+    of :func:`dense`.
+
+    When a ``use_rules`` scope with a non-trivial "model" mesh axis is
+    active, the frozen weight's block grid is partitioned over that
+    axis by engine cycle cost (``dist.csb_partition``) and executed via
+    the shard_map kernel (``kernels.csb_sharded``); otherwise this is
+    the plain single-device Pallas path. Either way the output is
+    tagged with the "residual" layout so downstream sublayers see the
+    same sharding a dense projection would produce.
+    """
+    return shard(lin(x).astype(x.dtype), "residual")
+
+
 # ---------------------------------------------------------------------------
 # RMSNorm
 # ---------------------------------------------------------------------------
