@@ -21,13 +21,18 @@ safe side for a hard CI gate; the diff still prints both ratios. The
 scale factor is clamped to [0.2, 5] so a broken calibration can never
 swing the verdict by more than that.
 
-Only the ``kernel`` table gates by default (--gate), and within a
-gated table only rows matching --gate-row (default "/mvm" — the
-kernel-latency rows; oracle timings and static ratios are
-informational). Rows below --min-us (noise floor) and rows missing
-from either side never gate, they are only reported. Numeric
-``derived`` drifts are reported informationally (pruning rates,
-utilization).
+The ``kernel`` and ``serve`` tables gate by default (--gate), and
+within a gated table only rows matching its --gate-row pattern gate
+(default "kernel:/mvm,serve:/us_per" — kernel MVM latencies plus the
+serve per-token/per-frame rows; oracle timings, static ratios and
+occupancy rows are informational). A bare substring (no ":") applies
+to every gated table. Serve rows carry latency in ``us_per_call``
+(us/token, us/frame) with the throughput (tokens/sec) in ``derived``,
+so one rule — "us_per_call regressed >threshold" — gates both a
+tokens/sec collapse and a frame-latency blowup. Rows below --min-us
+(noise floor) and rows missing from either side never gate, they are
+only reported. Numeric ``derived`` drifts are reported informationally
+(pruning rates, utilization, tokens/sec).
 
 Usage:
   python benchmarks/diff.py                    # diff + gate, exit 1 on fail
@@ -61,11 +66,26 @@ def _rows_by_name(rec: dict) -> dict[str, dict]:
     return {r["name"]: r for r in rec.get("rows", [])}
 
 
+def parse_gate_rows(arg: str) -> dict[str, str]:
+    """``"kernel:/mvm,serve:/us_per"`` -> per-table row substrings; a
+    bare entry (no ":") becomes the fallback for every table ("*")."""
+    out: dict[str, str] = {}
+    for part in (p for p in arg.split(",") if p):
+        table, sep, sub = part.partition(":")
+        if sep:
+            out[table] = sub
+        else:
+            out["*"] = part
+    return out
+
+
 def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                  threshold: float, gate_tables: set[str],
                  min_us: float,
-                 gate_row: str = "/mvm") -> tuple[list[str], list[str]]:
+                 gate_row: str = "kernel:/mvm,serve:/us_per",
+                 ) -> tuple[list[str], list[str]]:
     """Returns (report lines, gate failures)."""
+    gate_rows = parse_gate_rows(gate_row)
     lines: list[str] = []
     failures: list[str] = []
     for name in sorted(set(fresh) | set(base)):
@@ -97,7 +117,8 @@ def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                 norm = raw / scale
                 delta = (norm - 1.0) * 100
                 mark = ""
-                row_gates = gated and (not gate_row or gate_row in rname)
+                sub = gate_rows.get(name, gate_rows.get("*", ""))
+                row_gates = gated and (not sub or sub in rname)
                 # both ratios must regress: raw-only = calibration blip,
                 # normalized-only = slower machine (see module docstring)
                 if (row_gates and fu >= min_us
@@ -125,10 +146,11 @@ def main() -> int:
     ap.add_argument("--threshold", type=float,
                     default=float(os.environ.get("DIFF_THRESHOLD", 0.25)),
                     help="gated relative regression, 0.25 = +25%%")
-    ap.add_argument("--gate", default="kernel",
+    ap.add_argument("--gate", default="kernel,serve",
                     help="comma list of tables whose us_per_call gates")
-    ap.add_argument("--gate-row", default="/mvm",
-                    help="substring a row name must contain to gate "
+    ap.add_argument("--gate-row", default="kernel:/mvm,serve:/us_per",
+                    help="comma list of table:substring row filters; a "
+                         "bare substring applies to every gated table "
                          "(empty = every row of a gated table)")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="rows faster than this never gate (noise floor)")

@@ -25,6 +25,7 @@ BENCHES = [
     ("table3", "bench_latency"),
     ("kernel", "bench_kernel"),
     ("roofline", "bench_roofline"),
+    ("serve", "bench_serve"),
 ]
 
 

@@ -106,9 +106,19 @@ def fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P | None:
     return P(*entries)
 
 
-def shard(x: Any, name: str) -> Any:
+def shard(x: Any, name: str, *, fallback: str | None = None) -> Any:
     """Constrain ``x`` to the active rule for ``name`` (identity when no
-    rules/mesh are active, the name is unknown, or no dim fits)."""
+    rules/mesh are active, the name is unknown, or no dim fits).
+
+    ``fallback="replicate"`` pins ``x`` fully replicated when the rule
+    exists but no dim fits, instead of leaving the layout to GSPMD
+    propagation. Call sites whose downstream math re-chunks the tensor
+    (rope's rotate-half split/concat) use this: letting a weight's
+    output-dim sharding propagate into those reshapes triggers XLA's
+    involuntary-full-rematerialization transition, which the CPU SPMD
+    backend has been observed to compile to WRONG numerics — an
+    explicit layout sidesteps the transition entirely.
+    """
     rules = current_rules()
     if rules is None:
         return x
@@ -120,5 +130,7 @@ def shard(x: Any, name: str) -> Any:
         return x
     fitted = fit_spec(spec, x.shape, mesh)
     if fitted is None:
-        return x
+        if fallback != "replicate":
+            return x
+        fitted = P(*([None] * len(x.shape)))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))

@@ -148,7 +148,8 @@ def activation_rules(cfg, mesh, policy: ShardingPolicy, *,
     return Rules(table, mesh=mesh)
 
 
-def csb_shard_specs(obj: Any, mesh, *, axis: str = "model") -> Any:
+def csb_shard_specs(obj: Any, mesh, *, axis: str = "model",
+                    policy: "ShardingPolicy | None" = None) -> Any:
     """PartitionSpec tree for CSB weights, derived alongside the dense
     ``param_specs`` (same guards, same "model" axis).
 
@@ -156,11 +157,16 @@ def csb_shard_specs(obj: Any, mesh, *, axis: str = "model") -> Any:
     shard their leading device axis over ``axis`` when the split width
     matches the mesh; anything that cannot shard — an unsplit
     ``PaddedCSB``, or a split whose device count mismatches — is fully
-    replicated, mirroring the divisibility guards above. Returns a
-    structure-matched tree of PartitionSpecs (works on whole param
-    trees via ``tree_map`` with CSB containers as leaves).
+    replicated, mirroring the divisibility guards above. Dense leaves
+    fall through to the ``param_specs`` placement rules under
+    ``policy`` (default: no FSDP). Returns a structure-matched tree of
+    PartitionSpecs (works on whole param trees via ``tree_map`` with
+    CSB containers as leaves) — the one placement call a serve path
+    needs for a mixed dense/CSB parameter tree.
     """
     from repro.core.csb_format import PaddedCSB, ShardedCSB
+
+    policy = policy or ShardingPolicy()
 
     def one(path, leaf):
         if isinstance(leaf, ShardedCSB):
@@ -180,7 +186,7 @@ def csb_shard_specs(obj: Any, mesh, *, axis: str = "model") -> Any:
                 col_idx=P(None, None), m=P(None), n=P(None),
                 shape=leaf.shape, grid=leaf.grid, block=leaf.block,
             )
-        return _leaf_spec(path, leaf, mesh, ShardingPolicy())
+        return _leaf_spec(path, leaf, mesh, policy)
 
     def is_csb(x):
         return isinstance(x, (PaddedCSB, ShardedCSB))
@@ -201,7 +207,7 @@ def batch_specs(cfg, kind: str, mesh, *,
     if cfg.n_img_tokens:
         specs["img_embeds"] = P(dp, None, None)
     if kind == "decode":
-        specs["pos"] = P()
+        specs["pos"] = P(dp)          # (B,) per-slot positions
     return specs
 
 

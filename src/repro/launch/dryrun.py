@@ -141,7 +141,8 @@ def build_cell(arch: str, shape_name: str, mesh, extra_over=None,
         bsh = {k: NamedSharding(mesh, bspec.get(k, P())) for k in batch}
         return prefill_step, (aparams, batch), (psh, bsh), (), rules, cfg
 
-    # decode
+    # decode — the continuous-batching serve step: (B,) per-slot
+    # positions, tokens/pos/cache sharded over the data (replica) axes
     ins = input_specs(cfg, shp)
     csh = to_named(mesh, cache_specs(cfg, ins["cache"], mesh, policy))
     tok_sh = NamedSharding(mesh, bspec["tokens"])
@@ -150,7 +151,7 @@ def build_cell(arch: str, shape_name: str, mesh, extra_over=None,
         return model_decode_step(params, cache, tokens, pos, cfg)
 
     args = (aparams, ins["cache"], ins["tokens"], ins["pos"])
-    in_sh = (psh, csh, tok_sh, NamedSharding(mesh, P()))
+    in_sh = (psh, csh, tok_sh, NamedSharding(mesh, bspec.get("pos", P())))
     return serve_step, args, in_sh, (1,), rules, cfg
 
 
@@ -199,6 +200,38 @@ def csb_partition_report(cfg, mesh, bm: int = 64) -> dict:
         "speedup_vs_equal": round(
             max(equal.device_cycles) / max(max(greedy.device_cycles), 1),
             3),
+    }
+
+
+def serve_report(cfg, shp, rl, chips: int) -> dict:
+    """Continuous-batching serving projection for a decode cell.
+
+    Occupancy comes from replaying the real admission policy
+    (``serve.scheduler.simulate_admission``) over a deterministic
+    mixed-length trace (3 waves of requests, generation lengths spread
+    4x — the decode_32k traffic shape); tokens/sec projects the
+    roofline-dominant step time onto the occupied slots. Both land in
+    the dry-run record so slot-count / mesh choices are comparable
+    across cells before any hardware run.
+    """
+    from repro.serve.scheduler import Request, simulate_admission
+
+    slots = shp.global_batch
+    rng = np.random.default_rng(slots * 7 + shp.seq_len)
+    reqs = [
+        Request(rid=i, tokens=np.zeros(1, np.int32),
+                max_new_tokens=int(rng.integers(32, 129)),
+                arrival=(i // max(slots, 1)) * 48)
+        for i in range(slots * 3)
+    ]
+    sim = simulate_admission(slots, reqs)
+    step_s = max(rl.t_compute, rl.t_memory, rl.t_collective)
+    tps = (slots * sim["occupancy"] / step_s) if step_s > 0 else 0.0
+    return {
+        **sim,
+        "chips": chips,
+        "roofline_step_us": round(step_s * 1e6, 3),
+        "tokens_per_sec_estimate": round(tps, 1),
     }
 
 
@@ -284,6 +317,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "params": cfg.param_count(),
             "active_params": cfg.active_param_count(),
         })
+        if shp.kind == "decode":
+            rec["serve"] = serve_report(cfg, shp, rl, chips)
     except Exception as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"

@@ -26,10 +26,13 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
         return sds((b, length), I32)
 
     if shape.kind == "decode":
+        # per-slot positions: the serve scheduler refills freed slots
+        # mid-decode, so the production decode step carries a (B,) pos
+        # vector rather than one scalar depth for the whole batch
         return {
             "tokens": tok(gb, 1),
             "cache": abstract_cache(cfg, gb, s, jnp.dtype(cfg.dtype)),
-            "pos": sds((), I32),
+            "pos": sds((gb,), I32),
         }
 
     text_len = s - cfg.n_img_tokens if cfg.n_img_tokens else s

@@ -214,9 +214,17 @@ def attn_init(key, cfg: ModelConfig) -> PyTree:
 def attn_qkv(p, x, cfg: ModelConfig, pos):
     b, s, _ = x.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv
-    q = shard(dense(x, p["wq"]).reshape(b, s, nh, hd), "attn_q")
-    k = shard(dense(x, p["wk"]).reshape(b, s, nkv, hd), "attn_kv")
-    v = shard(dense(x, p["wv"]).reshape(b, s, nkv, hd), "attn_kv")
+    # fallback="replicate" on all three: q/k/v must not inherit the
+    # projection weight's output-dim sharding through the reshape — the
+    # resulting layout transitions (rope's rotate-half split/concat for
+    # q/k, the chunked attention scans for v; each observed empirically)
+    # miscompile on the CPU SPMD backend — see dist.api.shard
+    q = shard(dense(x, p["wq"]).reshape(b, s, nh, hd), "attn_q",
+              fallback="replicate")
+    k = shard(dense(x, p["wk"]).reshape(b, s, nkv, hd), "attn_kv",
+              fallback="replicate")
+    v = shard(dense(x, p["wv"]).reshape(b, s, nkv, hd), "attn_kv",
+              fallback="replicate")
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -234,12 +242,40 @@ def attn_apply(p, x, cfg: ModelConfig, *, window=None):
     return dense(o.reshape(b, s, -1), p["wo"])
 
 
+def _decode_pos(pos, s: int):
+    """Normalize a decode position to (query_pos, row_pos).
+
+    ``pos`` may be a scalar (whole batch at one depth — the fixed-batch
+    serve loop) or a (B,) vector (continuous batching: each slot decodes
+    at its own depth). Returns the rope positions for the s query tokens
+    — (s,) or (B, s) — and ``row_pos`` shaped (1,) or (B,) for per-row
+    cache masking.
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return pos + jnp.arange(s), pos[None]
+    return pos[:, None] + jnp.arange(s), pos
+
+
+def _cache_write(buf, new, pos):
+    """Write ``new`` (B, s, ...) into ``buf`` (B, T, ...) at time ``pos``
+    (scalar, or (B,) with a per-row write offset)."""
+    new = new.astype(buf.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
+    return jax.vmap(
+        lambda b_, n_, p_: jax.lax.dynamic_update_slice_in_dim(b_, n_, p_, 0)
+    )(buf, new, pos)
+
+
 def attn_decode(p, x, cfg: ModelConfig, cache, pos):
-    """One-token decode. cache: {k:(B,T,KV,D), v:...}; pos: scalar."""
+    """One-token decode. cache: {k:(B,T,KV,D), v:...}; pos: scalar or
+    (B,) per-sequence positions (continuous batching)."""
     b, s, _ = x.shape  # s == 1
-    q, k, v = attn_qkv(p, x, cfg, pos + jnp.arange(s))
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    qpos, row_pos = _decode_pos(pos, s)
+    q, k, v = attn_qkv(p, x, cfg, qpos)
+    ck = _cache_write(cache["k"], k, pos)
+    cv = _cache_write(cache["v"], v, pos)
     t = ck.shape[1]
     kv = ck.shape[2]
     rep = cfg.n_heads // kv
@@ -248,10 +284,10 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
                     preferred_element_type=F32)
     sc = sc / math.sqrt(cfg.hd)
     kpos = jnp.arange(t)
-    mask = kpos[None, :] <= pos
+    mask = kpos[None, :] <= row_pos[:, None]          # (1|B, T)
     if cfg.window is not None:
-        mask &= kpos[None, :] > pos - cfg.window
-    sc = jnp.where(mask[None, None, None], sc, -1e30)
+        mask &= kpos[None, :] > row_pos[:, None] - cfg.window
+    sc = jnp.where(mask[:, None, None, None, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", pattn.astype(cv.dtype), cv,
                    preferred_element_type=F32)
@@ -293,11 +329,14 @@ def _mla_qkv(p, x, cfg: ModelConfig, pos):
     qa = rmsnorm(dense(x, p["wq_a"]), p["q_norm"])
     qb = dense(qa, p["wq_b"]).reshape(b, s, nh, hd + rd)
     q_nope, q_rope = qb[..., :hd], qb[..., hd:]
+    # same rope layout guard as attn_qkv (see dist.api.shard)
+    q_rope = shard(q_rope, "attn_q", fallback="replicate")
     q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
 
     kva = dense(x, p["wkv_a"])
     c_kv = rmsnorm(kva[..., : cfg.kv_lora], p["kv_norm"])   # (B,S,kvl)
     k_rope = kva[..., cfg.kv_lora:].reshape(b, s, 1, rd)
+    k_rope = shard(k_rope, "attn_kv", fallback="replicate")
     k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
     return q_nope, q_rope, c_kv, k_rope
 
@@ -317,14 +356,14 @@ def mla_apply(p, x, cfg: ModelConfig, *, window=None):
 
 
 def mla_decode(p, x, cfg: ModelConfig, cache, pos):
-    """Decode with the *compressed* cache (c_kv + k_rope) — MLA's point."""
+    """Decode with the *compressed* cache (c_kv + k_rope) — MLA's point.
+    ``pos``: scalar, or (B,) per-sequence positions."""
     b, s, _ = x.shape
     hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos + jnp.arange(s))
-    cc = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, 1)
-    cr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), pos, 1)
+    qpos, row_pos = _decode_pos(pos, s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, qpos)
+    cc = _cache_write(cache["c_kv"], c_kv, pos)
+    cr = _cache_write(cache["k_rope"], k_rope[:, :, 0], pos)
     t = cc.shape[1]
     # absorb k up-projection into q (the MLA decode trick):
     # score = q_nope . (W_kb c) = (W_kb^T q_nope) . c
@@ -336,8 +375,8 @@ def mla_decode(p, x, cfg: ModelConfig, cache, pos):
     s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(cr.dtype), cr,
                      preferred_element_type=F32)
     sc = (s_c + s_r) / math.sqrt(hd + rd)
-    mask = jnp.arange(t)[None, :] <= pos
-    sc = jnp.where(mask[None, None], sc, -1e30)
+    mask = jnp.arange(t)[None, :] <= row_pos[:, None]  # (1|B, T)
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o_c = jnp.einsum("bhqk,bkl->bqhl", pattn.astype(cc.dtype), cc,
                      preferred_element_type=F32)          # (B,1,H,kvl)

@@ -321,7 +321,12 @@ def _ssd_prefill(p, h, cfg: ModelConfig):
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
-    """One token for the whole batch. tokens: (B, 1) or (B, 1, K)."""
+    """One token for the whole batch. tokens: (B, 1) or (B, 1, K).
+
+    ``pos`` is a scalar (fixed-batch decode: every row at one depth) or
+    a (B,) int vector (continuous batching: each slot at its own depth —
+    the serve scheduler refills freed slots mid-decode, so rows diverge).
+    """
     x = embed_tokens(params, tokens, cfg)
 
     def body(carry, inp):

@@ -1,4 +1,31 @@
-"""repro.serve — batched inference loops."""
-from .engine import ServeConfig, generate, rnn_serve_frames
+"""repro.serve — batched + continuous-batching inference loops.
 
-__all__ = ["ServeConfig", "generate", "rnn_serve_frames"]
+``engine`` owns the device loops (fixed-batch ``generate``, slot-based
+``serve_continuous``, frame-by-frame ``rnn_serve_frames``), all of which
+run sharded under the ``dist`` rules when a mesh is supplied;
+``scheduler`` owns request admission and slot-granular cache reuse.
+"""
+from .engine import (
+    ServeConfig,
+    ServeResult,
+    generate,
+    rnn_serve_frames,
+    serve_continuous,
+    shard_cell_params,
+)
+from .scheduler import (
+    Request,
+    SlotScheduler,
+    cache_len_of,
+    evict_slot,
+    grow_cache,
+    insert_slot_cache,
+    simulate_admission,
+)
+
+__all__ = [
+    "ServeConfig", "ServeResult", "generate", "rnn_serve_frames",
+    "serve_continuous", "shard_cell_params",
+    "Request", "SlotScheduler", "cache_len_of", "evict_slot",
+    "grow_cache", "insert_slot_cache", "simulate_admission",
+]

@@ -1,27 +1,56 @@
-"""Batched serving.
+"""Sharded batched + continuous serving.
 
 ``generate`` — prefill a batch of prompts, then greedy/temperature decode
 with the jitted single-token step (the decode_32k / long_500k workload).
+
+``serve_continuous`` — the production shape: a fixed batch of decode
+*slots* fed by :class:`repro.serve.scheduler.SlotScheduler`. Requests
+with mixed prompt lengths arrive over time; a finished request's slot is
+evicted and the next queued prompt prefilled into it mid-decode, so the
+jitted step (compiled once) keeps every slot busy.
 
 ``rnn_serve_frames`` — the paper's own serving shape: frame-by-frame RNN
 inference (one MVM-bound cell step per frame) with CSB-compressed
 weights; returns per-frame outputs and the wall-clock per frame so the
 faster-than-realtime criterion (<500 us/frame for speech) can be checked
 on real hardware.
+
+All three run under the ``dist`` sharding rules: pass ``mesh=`` (or call
+inside a ``use_rules`` scope whose Rules carry a mesh) and parameters
+are placed via ``param_specs``/``csb_shard_specs`` on the "model" axis
+(CSB weights route through ``csb_matvec_sharded``), while the decode
+cache and token batch shard over the "data" axes via
+``cache_specs``/``batch_specs`` — the data axes act as a replica set
+for continuous batching, each replica carrying its share of the slots.
+Without a mesh everything degrades to the single-device paths the CPU
+tests use.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 import time
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.cells import CellGraph, cell_apply, init_state
+from repro.dist import (
+    Rules, ShardingPolicy, activation_rules, batch_specs, cache_specs,
+    csb_shard_specs, current_rules, fit_spec, use_rules,
+)
 from repro.models import ModelConfig
 from repro.models import lm as LM
+
+from .scheduler import (
+    Request, SlotScheduler, cache_len_of, evict_slot, grow_cache,
+    insert_slot_cache,
+)
 
 PyTree = Any
 
@@ -33,67 +62,334 @@ class ServeConfig:
     cache_len: int | None = None  # default: prompt + new tokens
 
 
+def _resolve_mesh(mesh):
+    """Explicit mesh arg, else the active Rules' mesh; trivial -> None."""
+    if mesh is None:
+        mesh = getattr(current_rules(), "mesh", None)
+    if mesh is None or math.prod(dict(mesh.shape).values()) <= 1:
+        return None
+    return mesh
+
+
+def _dp_spec(mesh, shape: tuple[int, ...], batch_axis: int = 0) -> P:
+    """Spec sharding ``batch_axis`` over the non-model (data) axes,
+    divisibility-guarded; every other dim replicated."""
+    from repro.dist.rules import _dp_entry
+    entries: list[Any] = [None] * len(shape)
+    entries[batch_axis] = _dp_entry(mesh)
+    fitted = fit_spec(P(*entries), shape, mesh)
+    return fitted if fitted is not None else P(*([None] * len(shape)))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted(cfg: ModelConfig, rules_key):
+    """Jitted prefill + decode-step wrappers, cached per (cfg, rules)
+    so repeated generate/serve_continuous calls (benchmarks, request
+    waves) reuse compiled executables instead of retracing. The traced
+    program depends on the active Rules (sharding constraints), hence
+    ``rules_key`` — (mesh, policy) for derived rules, the caller's
+    Rules instance (identity-hashed) for ambient ones, None for the
+    inert single-device path; params are call arguments, so fresh
+    weights hit the same cache."""
+    return {
+        "prefill": jax.jit(partial(LM.prefill, cfg=cfg)),
+        # one jitted step per pos rank: scalar (fixed batch) / (B,) slots
+        "steps": {},
+    }
+
+
+class _Runner:
+    """One (params, cfg, mesh, policy) serving context: places the
+    parameter tree once, owns the jitted prefill/decode callables, and
+    re-installs its Rules around every traced call so model-side
+    ``shard()`` tags resolve.
+
+    Rules precedence: an explicit ``mesh=`` derives the canonical
+    ``activation_rules`` for it; with no mesh argument, a caller's
+    ambient ``use_rules`` scope is honored verbatim — both its mesh and
+    its table (a caller that hand-built cache layouts keeps them)."""
+
+    def __init__(self, params, cfg: ModelConfig, mesh=None, policy=None):
+        self.cfg = cfg
+        ambient = current_rules()
+        self.mesh = _resolve_mesh(mesh)
+        self.policy = policy or ShardingPolicy()
+        if self.mesh is not None:
+            if mesh is None and ambient is not None:
+                self.rules = ambient
+                rules_key: Any = ambient
+            else:
+                self.rules = activation_rules(cfg, self.mesh, self.policy)
+                rules_key = (self.mesh, self.policy)
+            specs = csb_shard_specs(params, self.mesh, policy=self.policy)
+            self.params = jax.tree.map(
+                lambda leaf, sp: jax.device_put(
+                    leaf, NamedSharding(self.mesh, sp)), params, specs)
+        else:
+            # meshless rules are inert for shard(): one shared trace
+            self.rules = ambient or Rules({})
+            self.params = params
+            rules_key = None
+        jt = _jitted(cfg, rules_key)
+        self._prefill = jt["prefill"]
+        self._steps = jt["steps"]
+        # per-shape NamedSharding cache: spec derivation is loop-
+        # invariant, and place_tokens/place_pos sit on the per-token
+        # path the serve benchmark gates
+        self._shardings: dict = {}
+
+    def _batch_sharding(self, key: str, shape) -> NamedSharding | None:
+        ck = (key, shape)
+        if ck not in self._shardings:
+            spec = batch_specs(self.cfg, "decode", self.mesh)[key]
+            fitted = fit_spec(spec, shape, self.mesh)
+            self._shardings[ck] = (None if fitted is None
+                                   else NamedSharding(self.mesh, fitted))
+        return self._shardings[ck]
+
+    def prefill(self, tokens: jax.Array):
+        with use_rules(self.rules):
+            return self._prefill(self.params, {"tokens": tokens})
+
+    def place_cache(self, cache: PyTree) -> PyTree:
+        if self.mesh is None:
+            return cache
+        specs = cache_specs(self.cfg, cache, self.mesh, self.policy)
+        return jax.tree.map(
+            lambda leaf, sp: jax.device_put(
+                leaf, NamedSharding(self.mesh, sp)), cache, specs)
+
+    def place_tokens(self, tokens: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return tokens
+        sh = self._batch_sharding("tokens", tokens.shape)
+        return tokens if sh is None else jax.device_put(tokens, sh)
+
+    def place_pos(self, pos: jax.Array) -> jax.Array:
+        if self.mesh is None or pos.ndim == 0:
+            return pos
+        sh = self._batch_sharding("pos", pos.shape)
+        return pos if sh is None else jax.device_put(pos, sh)
+
+    def place_slot_cache(self, req_cache: PyTree) -> PyTree:
+        """Replicate a freshly prefilled single-request cache before it
+        is written into the batch cache. Prefill tags its KV with the
+        time-sharded ``kv_cache`` layout; letting GSPMD transition that
+        straight into the batch cache's layout inside the jitted insert
+        is the involuntary-full-rematerialization path (see
+        ``dist.api.shard``) — an explicit host-side replication copy is
+        tiny (one request) and keeps the insert a plain masked update."""
+        if self.mesh is None:
+            return req_cache
+        return jax.tree.map(
+            lambda leaf: jax.device_put(leaf, NamedSharding(
+                self.mesh, P(*([None] * leaf.ndim)))), req_cache)
+
+    def step(self, cache, tokens, pos):
+        fn = self._steps.get(jnp.ndim(pos))
+        if fn is None:
+            fn = jax.jit(partial(LM.decode_step, cfg=self.cfg),
+                         donate_argnums=(1,))
+            self._steps[jnp.ndim(pos)] = fn
+        with use_rules(self.rules):
+            return fn(self.params, cache, tokens, pos)
+
+
+def _sampler(cfg: ModelConfig, temperature: float):
+    def sample(lg, key):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1)
+        return jax.random.categorical(key, lg / temperature, axis=-1)
+
+    return sample
+
+
+# ---------------------------------------------------------------------------
+# fixed-batch generate
+# ---------------------------------------------------------------------------
+
 def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
-             rng: jax.Array | None = None):
-    """tokens: (B, S_prompt) (or (B, S, K) codebooks). Returns (B, S+new)."""
+             rng: jax.Array | None = None, *, mesh=None, policy=None):
+    """tokens: (B, S_prompt) (or (B, S, K) codebooks). Returns (B, S+new).
+
+    With a mesh (argument or active Rules), params/cache/batch run
+    sharded; results match the single-device path token-for-token.
+    """
     b, s = tokens.shape[:2]
     total = scfg.cache_len or (s + scfg.max_new_tokens)
+    runner = _Runner(params, cfg, mesh, policy)
 
-    logits, cache = jax.jit(partial(LM.prefill, cfg=cfg))(
-        params, {"tokens": tokens})
+    logits, cache = runner.prefill(jnp.asarray(tokens))
     # right-size the cache for the decode loop
-    need = total - cache_len_of(cache)
-    if need > 0:
-        cache = grow_cache(cache, need)
+    cache = grow_cache(cache, total - cache_len_of(cache))
+    cache = runner.place_cache(cache)
 
-    step_jit = jax.jit(partial(LM.decode_step, cfg=cfg))
-
-    def sample(lg, key):
-        if scfg.temperature <= 0.0:
-            return jnp.argmax(lg, axis=-1)
-        return jax.random.categorical(key, lg / scfg.temperature, axis=-1)
-
+    sample = _sampler(cfg, scfg.temperature)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
-    out = [tokens]
+    out = [jnp.asarray(tokens)]
     cur = sample(logits, rng)[:, None]
     if cfg.n_codebooks and cur.ndim == 2:
         cur = cur[:, None]
     for i in range(scfg.max_new_tokens):
         out.append(cur)
         rng, k = jax.random.split(rng)
-        lg, cache = step_jit(params, cache, cur, jnp.asarray(s + i))
-        cur = sample(lg[:, -1] if not cfg.n_codebooks else lg[:, -1],
-                     k)[:, None]
+        lg, cache = runner.step(cache, runner.place_tokens(cur),
+                                jnp.asarray(s + i))
+        cur = sample(lg[:, -1], k)[:, None]
         if cfg.n_codebooks and cur.ndim == 2:
             cur = cur[:, None]
     return jnp.concatenate(out, axis=1)
 
 
-def cache_len_of(cache: PyTree) -> int:
-    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
-        keys = [getattr(k, "key", "") for k in path]
-        if keys and keys[-1] in ("k", "v", "c_kv"):
-            return leaf.shape[2]   # (L, B, T, ...)
-    return 0
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeResult:
+    """Outcome of a continuous-batching run."""
+
+    tokens: dict[int, list[int]]      # rid -> generated token ids
+    stats: dict                       # scheduler stats + throughput
+    wall_s: float
+
+    @property
+    def occupancy(self) -> float:
+        return self.stats["occupancy"]
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.stats["tokens_per_sec"]
 
 
-def grow_cache(cache: PyTree, extra: int) -> PyTree:
-    def grow(path, leaf):
-        keys = [getattr(k, "key", "") for k in path]
-        if keys and keys[-1] in ("k", "v", "c_kv", "k_rope") and leaf.ndim >= 3:
-            pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, extra)
-            return jnp.pad(leaf, pad)
-        return leaf
+def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
+                     *, n_slots: int = 4, temperature: float = 0.0,
+                     cache_len: int | None = None, mesh=None, policy=None,
+                     rng: jax.Array | None = None) -> ServeResult:
+    """Serve ``requests`` (mixed prompt lengths, arriving over time)
+    through ``n_slots`` continuously-batched decode slots.
 
-    return jax.tree_util.tree_map_with_path(grow, cache)
+    The decode step compiles once for the (n_slots, cache_len) shapes
+    and runs every step with per-slot positions; admission prefills each
+    arrived prompt at its natural length (one compile per distinct
+    length) and writes its cache into the freed slot. Greedy decoding
+    (``temperature=0``) matches ``generate`` token-for-token, sharded
+    or not.
+    """
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "serve_continuous drives single-stream token ids; codebook "
+            "models go through generate()")
+    if not requests:
+        stats = SlotScheduler(n_slots).stats()
+        stats.update(cache_len=0, tokens_per_sec=0.0,
+                     sharded=_resolve_mesh(mesh) is not None)
+        return ServeResult({}, stats, 0.0)
+    cache_len = cache_len or max(
+        r.prompt_len + r.max_new_tokens for r in requests)
+    short = [r for r in requests
+             if r.prompt_len + r.max_new_tokens > cache_len]
+    if short:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold request(s) "
+            f"{[r.rid for r in short]}")
+
+    runner = _Runner(params, cfg, mesh, policy)
+    sample = _sampler(cfg, temperature)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    sched = SlotScheduler(n_slots)
+    for r in requests:
+        sched.submit(r)
+
+    cache = runner.place_cache(
+        LM.init_cache(cfg, n_slots, cache_len, jnp.dtype(cfg.dtype)))
+    cur = jnp.zeros((n_slots, 1), jnp.int32)
+
+    t0 = time.perf_counter()
+    while sched.has_work():
+        for slot, req in sched.admit():
+            rng, k = jax.random.split(rng)
+            logits, req_cache = runner.prefill(
+                jnp.asarray(np.asarray(req.tokens))[None])
+            first = int(np.asarray(sample(logits, k)).reshape(-1)[0])
+            if sched.started(slot, first):
+                cache = insert_slot_cache(
+                    cache, runner.place_slot_cache(req_cache), slot)
+                cur = cur.at[slot, 0].set(first)
+            # max_new_tokens == 1: finished off the prefill alone; the
+            # slot never enters the decode batch, nothing to insert
+        active = sched.active_mask()
+        if not active.any():
+            sched.idle_tick()
+            continue
+        rng, k = jax.random.split(rng)
+        pos = runner.place_pos(jnp.asarray(sched.positions()))
+        lg, cache = runner.step(cache, runner.place_tokens(cur), pos)
+        nxt = sample(lg[:, -1], k)
+        for slot in sched.advance(np.asarray(nxt)):
+            cache = evict_slot(cache, slot)
+        cur = nxt[:, None].astype(jnp.int32)
+    jax.block_until_ready(cache)
+    wall = time.perf_counter() - t0
+
+    stats = sched.stats()
+    stats["cache_len"] = cache_len
+    stats["tokens_per_sec"] = round(
+        stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
+    stats["sharded"] = runner.mesh is not None
+    return ServeResult(sched.results, stats, wall)
+
+
+# ---------------------------------------------------------------------------
+# frame-by-frame RNN serving (the paper's workload)
+# ---------------------------------------------------------------------------
+
+def shard_cell_params(params: dict, mesh, axis_name: str = "model") -> dict:
+    """Cycle-balance every ``PaddedCSB`` cell weight over
+    ``mesh[axis_name]`` (``dist.csb_partition``'s greedy planner) and
+    place the whole tree with ``csb_shard_specs`` — after this,
+    ``cell_apply`` under ``use_rules`` routes each MVM through
+    ``csb_matvec_sharded``."""
+    from repro.core.csb_format import PaddedCSB
+    from repro.dist.csb_partition import partition_padded
+
+    n_dev = mesh.shape[axis_name]
+    out = {k: (partition_padded(w, n_dev)[1]
+               if isinstance(w, PaddedCSB) else w)
+           for k, w in params.items()}
+    specs = csb_shard_specs(out, mesh, axis=axis_name)
+    return jax.tree.map(
+        lambda leaf, sp: jax.device_put(leaf, NamedSharding(mesh, sp)),
+        out, specs)
 
 
 def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
-                     state: PyTree | None = None, warmup: int = 2):
-    """frames: (T, B, in_dim). Weights may be dense or PaddedCSB.
+                     state: PyTree | None = None, warmup: int = 2,
+                     *, mesh=None, axis_name: str = "model"):
+    """frames: (T, B, in_dim). Weights may be dense, PaddedCSB, or (with
+    a mesh) ShardedCSB.
 
-    Returns (outputs (T,B,H), final state, us_per_frame)."""
+    With ``mesh=`` (or an active Rules mesh with a non-trivial "model"
+    axis) the CSB weights are partitioned over the model axis and the
+    frame batch sharded over the data axes, so the per-frame latency is
+    measured on the sharded mesh — the paper's faster-than-realtime
+    number at multi-chip scale. Returns (outputs (T,B,H), final state,
+    us_per_frame)."""
+    mesh = _resolve_mesh(mesh)
+    rules = current_rules()
+    if mesh is not None:
+        if axis_name in tuple(mesh.axis_names) \
+                and mesh.shape[axis_name] > 1:
+            params = shard_cell_params(params, mesh, axis_name)
+        frames = jnp.asarray(frames)
+        frames = jax.device_put(frames, NamedSharding(    # (T, B, in): B=dp
+            mesh, _dp_spec(mesh, frames.shape, batch_axis=1)))
+        if rules is None or rules.mesh is not mesh:
+            rules = Rules({}, mesh=mesh)
+    if rules is None:
+        rules = Rules({})
+
     if state is None:
         state = init_state(graph, frames.shape[1:-1], jnp.float32)
 
@@ -102,18 +398,19 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
         y, st2 = cell_apply(graph, p, x, st)
         return y, st2
 
-    # warmup / compile
-    for _ in range(warmup):
-        y, _ = step(params, state, frames[0])
-    y.block_until_ready()
+    with use_rules(rules):
+        # warmup / compile
+        for _ in range(warmup):
+            y, _ = step(params, state, frames[0])
+        y.block_until_ready()
 
-    outs = []
-    t0 = time.perf_counter()
-    st = state
-    for t in range(frames.shape[0]):
-        y, st = step(params, st, frames[t])
-        outs.append(y)
-    jax.block_until_ready(outs[-1])
-    dt = time.perf_counter() - t0
+        outs = []
+        t0 = time.perf_counter()
+        st = state
+        for t in range(frames.shape[0]):
+            y, st = step(params, st, frames[t])
+            outs.append(y)
+        jax.block_until_ready(outs[-1])
+        dt = time.perf_counter() - t0
     us_per_frame = dt / frames.shape[0] * 1e6
     return jnp.stack(outs), st, us_per_frame

@@ -1,0 +1,298 @@
+"""Continuous-batching scheduler: request slots, admission, per-slot cache.
+
+The serve engine holds a fixed batch of ``n_slots`` decode *slots*
+(fixed shapes keep the decode step jitted once); requests flow through
+slots continuously — a finished request frees its slot mid-decode and
+the next queued prompt is prefilled straight into it, the way the
+paper's CSB engine keeps every PEGroup busy by re-balancing block work
+(§5.2) — here the balancing unit is a whole request.
+
+Split of responsibilities:
+
+* :class:`SlotScheduler` — pure host-side bookkeeping: admission queue,
+  per-slot position/remaining-token state, occupancy accounting. It
+  never touches a device array, so the same object is driven by the
+  real engine (``serve.engine.serve_continuous``) and by the modelless
+  :func:`simulate_admission` replay that launch/dryrun.py records.
+* :func:`insert_slot_cache` / :func:`evict_slot` — the device half:
+  slot-granular KV/state reuse. A freshly prefilled request cache
+  (batch 1, its own prompt length) is written into slot ``i`` of the
+  batch cache with one fused ``dynamic_update_slice`` per leaf; a
+  finished slot is zeroed so no request's KV/SSM state ever leaks into
+  its successor.
+* :func:`cache_len_of` / :func:`grow_cache` — time-dim introspection /
+  growth shared by the fixed-batch and continuous paths (moved here
+  from serve.engine; engine re-exports them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# cache leaves carrying a (L, B, T, ...) time dimension at axis 2
+_TIME_KEYS = ("k", "v", "c_kv", "k_rope")
+
+
+# ---------------------------------------------------------------------------
+# cache time-dim helpers
+# ---------------------------------------------------------------------------
+
+def cache_len_of(cache: PyTree) -> int:
+    """Time capacity T of a decode cache (0 for empty / pure-state
+    caches such as SSD, whose conv/ssm leaves carry no time dim)."""
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in ("k", "v", "c_kv"):
+            return leaf.shape[2]   # (L, B, T, ...)
+    return 0
+
+
+def grow_cache(cache: PyTree, extra: int) -> PyTree:
+    """Pad every time-keyed leaf by ``extra`` along its time dim.
+
+    No-op for ``extra <= 0``, for empty caches, and for leaves without a
+    time dim (conv/ssm state) — so ragged caches (hybrid: attn leaves
+    carry T, ssd leaves don't) grow only where growth means anything.
+    """
+    if extra <= 0:
+        return cache
+
+    def grow(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS and leaf.ndim >= 3:
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, extra)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+# ---------------------------------------------------------------------------
+# slot-granular cache ops (device side)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _insert(batch_cache: PyTree, slot_cache: PyTree, slot) -> PyTree:
+    def one(b, u):
+        starts = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, u.astype(b.dtype), starts)
+
+    return jax.tree.map(one, batch_cache, slot_cache)
+
+
+def insert_slot_cache(batch_cache: PyTree, slot_cache: PyTree,
+                      slot: int) -> PyTree:
+    """Write a prefilled single-request cache into batch slot ``slot``.
+
+    ``slot_cache`` leaves are (L, 1, T_req, ...) with T_req <= the batch
+    cache's capacity; time positions beyond T_req keep whatever the
+    batch cache held — harmless, because decode masks attention to
+    ``kpos <= pos`` and overwrites position ``pos`` before first use.
+    """
+    return _insert(batch_cache, slot_cache, jnp.asarray(slot, jnp.int32))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _evict(batch_cache: PyTree, slot) -> PyTree:
+    def one(b):
+        upd = jnp.zeros((b.shape[0], 1) + b.shape[2:], b.dtype)
+        starts = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, upd, starts)
+
+    return jax.tree.map(one, batch_cache)
+
+
+def evict_slot(batch_cache: PyTree, slot: int) -> PyTree:
+    """Zero slot ``slot`` across every cache leaf. Attention masking
+    alone already prevents a successor from *attending* stale KV; the
+    zeroing additionally clears carried state (SSM/conv) so nothing of
+    a finished request survives into the slot's next tenant."""
+    return _evict(batch_cache, jnp.asarray(slot, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# host-side scheduling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request.
+
+    ``arrival`` is measured in decode steps: the request may not be
+    admitted before the engine's clock reaches it (the mixed-length
+    prompts-arriving-over-time workload).
+    """
+
+    rid: int
+    tokens: Any                       # (S,) or (S, K) prompt token ids
+    max_new_tokens: int = 32
+    arrival: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[0])
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    pos: int                          # next cache write position
+    remaining: int
+    generated: list = dataclasses.field(default_factory=list)
+
+
+class SlotScheduler:
+    """Admission + slot bookkeeping. Drives nothing itself — the engine
+    (or :func:`simulate_admission`) owns the loop and tells the
+    scheduler what happened."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.now = 0                  # decode-step clock
+        self._pending: list[Request] = []
+        self._slots: list[_Slot | None] = [None] * n_slots
+        self.results: dict[int, list[int]] = {}
+        self.prefills = 0
+        self.decode_steps = 0
+        self.idle_steps = 0
+        self.active_slot_steps = 0
+
+    # -- submission / admission --------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: (r.arrival, r.rid))
+
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(
+            s is not None for s in self._slots)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots with arrived requests (FIFO by arrival).
+        The engine must prefill each returned request and then call
+        :meth:`started` with the token its prefill produced."""
+        out = []
+        for i in range(self.n_slots):
+            if self._slots[i] is not None:
+                continue
+            req = next((r for r in self._pending if r.arrival <= self.now),
+                       None)
+            if req is None:
+                break
+            self._pending.remove(req)
+            self._slots[i] = _Slot(rid=req.rid, pos=req.prompt_len,
+                                   remaining=req.max_new_tokens)
+            out.append((i, req))
+        return out
+
+    def started(self, slot: int, first_token: int) -> bool:
+        """Record the prefill-sampled first token. Returns False when
+        the request is already complete (max_new_tokens == 1) — the
+        engine should evict the slot without decoding it."""
+        s = self._slots[slot]
+        assert s is not None, "started() on a free slot"
+        self.prefills += 1
+        s.generated.append(int(first_token))
+        s.remaining -= 1
+        if s.remaining == 0:
+            self._finish(slot)
+            return False
+        return True
+
+    # -- per-step state the engine feeds the jitted decode ------------------
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([s is not None for s in self._slots], bool)
+
+    def positions(self) -> np.ndarray:
+        """(n_slots,) int32 cache positions; free slots report 0."""
+        return np.asarray([0 if s is None else s.pos
+                           for s in self._slots], np.int32)
+
+    def advance(self, sampled: np.ndarray) -> list[int]:
+        """One decode step ran over the whole batch. ``sampled[i]`` is
+        slot i's next token (ignored for free slots). Returns the slots
+        freed this step (engine evicts + refills them)."""
+        self.now += 1
+        self.decode_steps += 1
+        freed = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            self.active_slot_steps += 1
+            s.generated.append(int(np.asarray(sampled[i]).reshape(-1)[0]))
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining == 0:
+                self._finish(i)
+                freed.append(i)
+        return freed
+
+    def idle_tick(self) -> None:
+        """Nothing active and nothing arrived: jump the clock to the
+        next arrival instead of burning empty decode steps."""
+        nxt = min((r.arrival for r in self._pending), default=self.now + 1)
+        self.idle_steps += max(nxt - self.now, 1)
+        self.now = max(nxt, self.now + 1)
+
+    def _finish(self, slot: int) -> None:
+        s = self._slots[slot]
+        self.results[s.rid] = s.generated
+        self._slots[slot] = None
+
+    # -- reporting -----------------------------------------------------------
+    def occupancy(self) -> float:
+        """Achieved slot occupancy over decode steps: 1.0 means every
+        slot held a live request on every step the batch decoded."""
+        total = self.decode_steps * self.n_slots
+        return self.active_slot_steps / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "slots": self.n_slots,
+            "requests": len(self.results),
+            "generated_tokens": sum(len(v) for v in self.results.values()),
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+            "idle_steps": self.idle_steps,
+            "occupancy": round(self.occupancy(), 4),
+        }
+
+
+def simulate_admission(n_slots: int, requests: list[Request]) -> dict:
+    """Modelless replay of the admission policy: how well do ``n_slots``
+    stay occupied for this trace? Used by launch/dryrun.py to record the
+    achieved occupancy a decode cell's slot count implies, and by tests
+    (no devices, no model — pure host bookkeeping)."""
+    sched = SlotScheduler(n_slots)
+    for r in requests:
+        sched.submit(r)
+    guard = sum(r.max_new_tokens for r in requests) + sum(
+        r.arrival for r in requests) + len(requests) + 1
+    while sched.has_work():
+        for slot, _req in sched.admit():
+            sched.started(slot, 0)
+        if not sched.active_mask().any():
+            sched.idle_tick()
+            continue
+        sched.advance(np.zeros(n_slots, np.int64))
+        guard -= 1
+        if guard < 0:  # pragma: no cover - scheduler invariant broken
+            raise RuntimeError("simulate_admission did not terminate")
+    return sched.stats()
+
+
+__all__ = [
+    "Request", "SlotScheduler", "simulate_admission",
+    "cache_len_of", "grow_cache", "insert_slot_cache", "evict_slot",
+]
