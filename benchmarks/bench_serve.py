@@ -8,6 +8,10 @@ noise-robust min-of-N statistic:
   serve/continuous/us_per_token — wall-us per generated token through
       ``serve_continuous`` (mixed-length prompts arriving over time,
       slot eviction + refill mid-decode); derived = tokens/sec.
+  serve/paged/us_per_token     — the same trace through the paged
+      cache (block-pool allocator + page-table decode + pow2 prefill
+      bucketing); derived = tokens/sec. Gates the page-indirection
+      overhead on the per-token path.
   serve/generate/us_per_token  — the fixed-batch ``generate`` loop on
       the same model (the decode_32k shape, scaled down); derived =
       tokens/sec.
@@ -18,7 +22,9 @@ noise-robust min-of-N statistic:
       against themselves).
 
 Informational rows (never gate: us_per_call = 0): achieved slot
-occupancy and the scheduler's prefill/decode-step counts.
+occupancy, the scheduler's prefill/decode-step counts, and the paged
+memory footprint (peak pool tokens vs the contiguous cache the same
+trace would pin).
 """
 from __future__ import annotations
 
@@ -39,16 +45,22 @@ CFG = ModelConfig(name="serve-bench", mixer="attn", ffn="swiglu",
                   n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
                   d_ff=128, vocab=256, dtype="float32", logit_chunk=32,
                   remat=False)
+N_SLOTS = 4
 
 
 def _trace(rng) -> list[Request]:
-    """Mixed-length prompts arriving over time: 3 waves x 4 requests."""
+    """Mixed-length prompts arriving over time: 3 waves x 4 requests,
+    one long straggler per wave (4x the short totals) — the length skew
+    that makes the contiguous cache pay worst-case for every slot."""
     reqs = []
     for i in range(12):
-        plen = int(rng.integers(4, 13))
+        if i % 4 == 0:
+            plen, new = int(rng.integers(20, 25)), int(rng.integers(20, 25))
+        else:
+            plen, new = int(rng.integers(4, 13)), int(rng.integers(6, 13))
         reqs.append(Request(
             rid=i, tokens=rng.integers(0, CFG.vocab, size=plen),
-            max_new_tokens=int(rng.integers(6, 13)), arrival=(i // 4) * 4))
+            max_new_tokens=new, arrival=(i // 4) * 4))
     return reqs
 
 
@@ -58,10 +70,10 @@ def run() -> None:
     reqs = _trace(rng)
 
     # -- continuous batching (min-of-3 after a compile warmup) -------------
-    serve_continuous(params, CFG, reqs, n_slots=4)          # warmup
+    serve_continuous(params, CFG, reqs, n_slots=N_SLOTS)    # warmup
     best = None
     for _ in range(3):
-        r = serve_continuous(params, CFG, reqs, n_slots=4)
+        r = serve_continuous(params, CFG, reqs, n_slots=N_SLOTS)
         if best is None or r.wall_s < best.wall_s:
             best = r
     ntok = best.stats["generated_tokens"]
@@ -72,6 +84,25 @@ def run() -> None:
     emit("serve/continuous/steps", 0.0,
          f"prefills={best.stats['prefills']};"
          f"decode={best.stats['decode_steps']}")
+
+    # -- paged cache, same trace (min-of-3 after a compile warmup) ---------
+    serve_continuous(params, CFG, reqs, n_slots=N_SLOTS, paged=True,
+                     page_size=8)                           # warmup
+    bestp = None
+    for _ in range(3):
+        r = serve_continuous(params, CFG, reqs, n_slots=N_SLOTS,
+                             paged=True, page_size=8)
+        if bestp is None or r.wall_s < bestp.wall_s:
+            bestp = r
+    ntok = bestp.stats["generated_tokens"]
+    emit("serve/paged/us_per_token", bestp.wall_s * 1e6 / ntok,
+         f"{ntok / bestp.wall_s:.1f}")
+    pg = bestp.stats["paging"]
+    contiguous_tokens = N_SLOTS * bestp.stats["cache_len"]
+    emit("serve/paged/peak_cache_tokens", 0.0,
+         f"paged={pg['peak_pages'] * pg['page_size']};"
+         f"contiguous={contiguous_tokens};"
+         f"frag={pg['internal_fragmentation']}")
 
     # -- fixed-batch generate ----------------------------------------------
     prompts = jax.numpy.asarray(

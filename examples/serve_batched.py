@@ -1,6 +1,6 @@
 """End-to-end serving driver (the paper's workload shape: inference).
 
-Three parts:
+Four parts:
 1. Continuous batching: mixed-length prompts arriving over time flow
    through a fixed set of decode slots — finished requests are evicted
    and the next queued prompt prefilled into the freed slot mid-decode.
@@ -8,10 +8,18 @@ Three parts:
    XLA_FLAGS=--xla_force_host_platform_device_count=8) the whole loop
    runs sharded on a 2x4 ("data", "model") mesh: params placed by
    param_specs/csb_shard_specs, cache + token batch data-parallel via
-   cache_specs/batch_specs.
-2. Fixed-batch LM serving: prefill a batch of prompts and greedily
+   cache_specs/batch_specs. The run goes through the PAGED cache
+   (paged=True): fixed-size token pages from a shared pool, pow2
+   prompt-bucketed prefill — and its tokens are asserted identical to
+   the contiguous engine's.
+2. The paging win: the same token budget is handed to both engines as
+   a hard cap. The contiguous engine can only carve it into 2
+   worst-case-length slots and queues the rest; the paged pool
+   reserves per-request pages and runs more of the mixed-length trace
+   concurrently — asserted, not just printed.
+3. Fixed-batch LM serving: prefill a batch of prompts and greedily
    decode through the jitted single-token step.
-3. Faster-than-realtime RNN frame serving: an LSTM with CSB-compressed
+4. Faster-than-realtime RNN frame serving: an LSTM with CSB-compressed
    weights processes a stream of frames — on the mesh the CSB block
    grid is cycle-balanced over the "model" axis and executed by the
    shard_map kernel; reports us/frame against the paper's 500 us
@@ -58,16 +66,48 @@ requests = [
 ]
 print(f"\n{len(requests)} requests, prompt lens "
       f"{[r.prompt_len for r in requests]}, arrivals "
-      f"{[r.arrival for r in requests]}, 4 slots")
-res = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh)
+      f"{[r.arrival for r in requests]}, 4 slots, PAGED cache")
+res = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh,
+                       paged=True, page_size=8)
 st = res.stats
-print(f"continuous serve: {st['requests']} requests, "
+pg = st["paging"]
+print(f"paged serve: {st['requests']} requests, "
       f"{st['generated_tokens']} tokens in {res.wall_s:.2f}s "
       f"({st['tokens_per_sec']:.1f} tok/s, occupancy "
       f"{st['occupancy']:.0%}, {st['prefills']} prefills over "
-      f"{st['decode_steps']} decode steps, sharded={st['sharded']})")
+      f"{st['decode_steps']} decode steps, sharded={st['sharded']}, "
+      f"bucketed_prefill={st['bucketed_prefill']})")
+print(f"  pages: peak {pg['peak_pages']}/{pg['n_pages']} x "
+      f"{pg['page_size']} tokens, internal fragmentation "
+      f"{pg['internal_fragmentation']:.1%}")
+res_contig = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh)
+assert res.tokens == res_contig.tokens, \
+    "paged and contiguous engines must emit identical tokens"
+print("  paged tokens == contiguous tokens: verified")
 
-# -- 2. fixed-batch LM serving ---------------------------------------------
+# -- 2. the paging win: same token budget, more concurrency ----------------
+long_req = Request(rid=100, tokens=rng.integers(0, cfg.vocab, size=16),
+                   max_new_tokens=32)                       # total 48
+shorts = [Request(rid=101 + i,
+                  tokens=rng.integers(0, cfg.vocab, size=8),
+                  max_new_tokens=8) for i in range(4)]      # total 16
+cache_len = 48
+budget = 2 * cache_len                                      # 96 tokens
+paged = serve_continuous(params, cfg, [long_req] + shorts, n_slots=4,
+                         paged=True, page_size=8, cache_len=cache_len,
+                         pool_pages=budget // 8, mesh=mesh)
+contig = serve_continuous(params, cfg, [long_req] + shorts,
+                          n_slots=budget // cache_len, cache_len=cache_len,
+                          mesh=mesh)
+assert paged.tokens == contig.tokens
+assert paged.stats["peak_active"] > contig.stats["peak_active"]
+print(f"\nsame {budget}-token budget: contiguous fits "
+      f"{contig.stats['peak_active']} concurrent requests "
+      f"({contig.stats['decode_steps']} decode steps), paged fits "
+      f"{paged.stats['peak_active']} ({paged.stats['decode_steps']} "
+      f"steps) — identical outputs")
+
+# -- 3. fixed-batch LM serving ---------------------------------------------
 prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
 t0 = time.perf_counter()
 out = generate(params, cfg, prompts, ServeConfig(max_new_tokens=16),
@@ -79,7 +119,7 @@ print(f"\nbatched generate: {out.shape[0]} seqs x {out.shape[1]} tokens "
       f"({new_tokens} new) in {dt:.2f}s "
       f"-> {dt / new_tokens * 1e3:.1f} ms/token (CPU)")
 
-# -- 3. CSB-RNN frame serving ----------------------------------------------
+# -- 4. CSB-RNN frame serving ----------------------------------------------
 cell = make_cell("lstm", 64, 128)
 wparams = cell_init(cell, jax.random.PRNGKey(2))
 spec = CSBSpec(bm=16, bn=16, prune_rate=0.9)     # 10x compression

@@ -46,6 +46,8 @@ residual       lm.layer_apply / embed     (B@dp, S[@model if SP], d)
 logits         lm.lm_loss CE chunks       (B@dp, ck, [K,] V@model)
 kv_cache       lm prefill/init_cache      (B@dp, T@model, KV, D)
 mla_cache      lm prefill/init_cache      (B@dp, T@model, kv_lora)
+kv_pages       lm init_paged_cache        (N@dp, P, KV, D)
+mla_pages      lm init_paged_cache        (N@dp, P, kv_lora)
 attn_q         layers.attn_qkv            (B@dp, S, H@model, D)
 attn_kv        layers.attn_qkv            (B@dp, S, KV@model, D)
 moe_groups     layers.moe_apply           (G@dp, C, d)

@@ -139,6 +139,10 @@ def activation_rules(cfg, mesh, policy: ShardingPolicy, *,
         "logits": logits,
         "kv_cache": P(dp, cache_seq, None, None),  # (B, T, KV, D)
         "mla_cache": P(dp, cache_seq, None),      # (B, T, kv_lora)
+        # paged pools: pages data-parallel, page dims replicated (the
+        # page table is replicated, so every replica can reach any page)
+        "kv_pages": P(dp, None, None, None),      # (N, P, KV, D)
+        "mla_pages": P(dp, None, None),           # (N, P, kv_lora)
         "attn_q": P(dp, None, "model", None),     # (B, S, H, D)
         "attn_kv": P(dp, None, "model", None),    # (B, S, KV, D)
         "moe_groups": P(dp, None, None),          # (G, C, d)
@@ -212,16 +216,31 @@ def batch_specs(cfg, kind: str, mesh, *,
 
 
 def cache_specs(cfg, cache: PyTree, mesh,
-                policy: ShardingPolicy) -> PyTree:
+                policy: ShardingPolicy, *, paged: bool = False) -> PyTree:
     """Decode-cache shardings. Leaves carry a leading stacked-layer axis
-    (always replicated — the decode scan iterates it)."""
+    (always replicated — the decode scan iterates it).
+
+    ``paged=True`` describes the page-pool layout (``serve.paging``):
+    time-keyed leaves are pools shaped (L, N_pages, page_size, ...)
+    shared by every slot, sharded over the data axes on the *page* dim
+    (each replica holds a shard of the pool; the page table stays
+    replicated so any slot can reach any page — GSPMD routes the
+    cross-shard gathers). State leaves (SSM/conv) keep their per-slot
+    batch sharding in both modes. Divisibility guards apply as
+    everywhere: a pool whose page count (incl. the +1 scratch page)
+    does not divide the data axes simply replicates.
+    """
     dp = _dp_entry(mesh)
     cs = "model" if policy.shard_cache_seq else None
 
     def one(path, leaf):
         name = _path_keys(path)[-1]
         nd = len(leaf.shape)
-        if name in ("k", "v"):            # (L, B, T, KV, D)
+        if paged and name in ("k", "v"):        # (L, N, P, KV, D)
+            spec = P(None, dp, None, None, None)
+        elif paged and name in ("c_kv", "k_rope"):  # (L, N, P, d)
+            spec = P(None, dp, None, None)
+        elif name in ("k", "v"):          # (L, B, T, KV, D)
             spec = P(None, dp, cs, None, None)
         elif name in ("c_kv", "k_rope"):  # (L, B, T, lora/rd)
             spec = P(None, dp, cs, None)

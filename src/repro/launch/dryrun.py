@@ -203,7 +203,7 @@ def csb_partition_report(cfg, mesh, bm: int = 64) -> dict:
     }
 
 
-def serve_report(cfg, shp, rl, chips: int) -> dict:
+def serve_report(cfg, shp, rl, chips: int, page_size: int = 64) -> dict:
     """Continuous-batching serving projection for a decode cell.
 
     Occupancy comes from replaying the real admission policy
@@ -213,7 +213,16 @@ def serve_report(cfg, shp, rl, chips: int) -> dict:
     roofline-dominant step time onto the occupied slots. Both land in
     the dry-run record so slot-count / mesh choices are comparable
     across cells before any hardware run.
+
+    The ``paged`` sub-record replays the same trace through a
+    ``serve.paging.PagePool`` sized to the full contiguous footprint:
+    ``peak_pages`` vs ``n_pages`` is the fraction of the contiguous
+    cache a right-sized pool would actually need, and
+    ``internal_fragmentation`` is the token capacity wasted inside
+    allocated pages (the partial-last-page cost the page size trades
+    against table size).
     """
+    from repro.serve.paging import PagePool, pages_for
     from repro.serve.scheduler import Request, simulate_admission
 
     slots = shp.global_batch
@@ -227,11 +236,32 @@ def serve_report(cfg, shp, rl, chips: int) -> dict:
     sim = simulate_admission(slots, reqs)
     step_s = max(rl.t_compute, rl.t_memory, rl.t_collective)
     tps = (slots * sim["occupancy"] / step_s) if step_s > 0 else 0.0
+
+    cache_len = max(r.prompt_len + r.max_new_tokens for r in reqs)
+    max_pages = pages_for(cache_len, page_size)
+    pool = PagePool(page_size, slots * max_pages, slots, max_pages)
+    paged_sim = simulate_admission(
+        slots, [Request(rid=r.rid, tokens=r.tokens,
+                        max_new_tokens=r.max_new_tokens,
+                        arrival=r.arrival) for r in reqs], pool=pool)
+    paging = paged_sim.pop("paging")
+    peak_tokens = paging["peak_pages"] * page_size
     return {
         **sim,
         "chips": chips,
         "roofline_step_us": round(step_s * 1e6, 3),
         "tokens_per_sec_estimate": round(tps, 1),
+        "paged": {
+            **paging,
+            "contiguous_tokens": slots * cache_len,
+            "peak_tokens": peak_tokens,
+            # what a right-sized pool pins vs the contiguous cache's
+            # slots*cache_len — page-padding overhead included, so the
+            # win shrinks as internal fragmentation grows
+            "footprint_vs_contiguous": round(
+                peak_tokens / (slots * cache_len), 4),
+            "page_stalls": paged_sim.get("page_stalls", 0),
+        },
     }
 
 
@@ -319,6 +349,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         })
         if shp.kind == "decode":
             rec["serve"] = serve_report(cfg, shp, rl, chips)
+        if shp.kind == "train":
+            # grad all-reduce traffic with/without the int8
+            # error-feedback compressor (TrainConfig.compress_grads):
+            # int8 codes + one fp32 scale per leaf on the wire
+            leaves = jax.tree.leaves(abstract_params(cfg))
+            fp32 = sum(int(np.prod(l.shape)) * 4 for l in leaves)
+            int8 = sum(int(np.prod(l.shape)) + 4 for l in leaves)
+            rec["collectives"]["grad_compress"] = {
+                "allreduce_bytes_fp32": fp32,
+                "allreduce_bytes_int8_ef": int8,
+                "ratio": round(fp32 / max(int8, 1), 3),
+                "enabled_by": "TrainConfig.compress_grads",
+            }
     except Exception as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"

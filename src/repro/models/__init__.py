@@ -2,16 +2,20 @@
 from .config import ModelConfig, ShapeConfig, SHAPES, SUBQUADRATIC, reduced
 from .lm import (
     abstract_cache,
+    abstract_paged_cache,
     abstract_params,
     decode_step,
+    decode_step_paged,
     forward_loss,
     init_cache,
+    init_paged_cache,
     init_params,
     prefill,
 )
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "SHAPES", "SUBQUADRATIC", "reduced",
-    "abstract_cache", "abstract_params", "decode_step", "forward_loss",
-    "init_cache", "init_params", "prefill",
+    "abstract_cache", "abstract_paged_cache", "abstract_params",
+    "decode_step", "decode_step_paged", "forward_loss",
+    "init_cache", "init_paged_cache", "init_params", "prefill",
 ]

@@ -303,6 +303,84 @@ def attn_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Paged cache primitives (serve.paging owns the page table; this is the
+# device half: position -> (page, offset) indirection on pool-shaped
+# cache leaves (N_pages, page_size, ...) shared by all decode slots)
+# ---------------------------------------------------------------------------
+
+def paged_write(pool: jax.Array, new: jax.Array, pos,
+                page_table: jax.Array) -> jax.Array:
+    """Scatter one decode step's ``new`` (B, 1, ...) into ``pool``
+    (N, P, ...) at each row's (page, offset) for time position ``pos``
+    (scalar or (B,)).
+
+    Rows whose position is not mapped (inactive slots) carry the scratch
+    page in ``page_table`` (serve.paging.PagePool.device_table), so the
+    scatter needs no mask; live slots own disjoint pages by allocator
+    invariant, so writes never collide.
+    """
+    b = new.shape[0]
+    psz = pool.shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    logical = jnp.clip(posv // psz, 0, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    return pool.at[page, posv % psz].set(new[:, 0].astype(pool.dtype))
+
+
+def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize each slot's logical time extent from the pool:
+    (N, P, ...) gathered through (B, max_pages) -> (B, max_pages*P, ...).
+
+    Unmapped entries gather the scratch page; its (finite garbage)
+    values sit at logical positions beyond the slot's decode position
+    and the ``kpos <= pos`` mask zeroes them out of the softmax exactly
+    (exp(-1e30 - m) underflows to 0 in f32).
+    """
+    b, mp = page_table.shape
+    g = pool[page_table]                       # (B, max_pages, P, ...)
+    return g.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
+
+
+def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+    """One-token decode through the paged KV pool. cache:
+    {k: (N, P, KV, D), v: ...}; ``page_table``: (B, max_pages) int32."""
+    b, s, _ = x.shape  # s == 1
+    qpos, row_pos = _decode_pos(pos, s)
+    q, k, v = attn_qkv(p, x, cfg, qpos)
+    ck = paged_write(cache["k"], k, pos, page_table)
+    cv = paged_write(cache["v"], v, pos, page_table)
+    kg = paged_gather(ck, page_table)          # (B, T, KV, D)
+    vg = paged_gather(cv, page_table)
+    t = kg.shape[1]
+    kv = kg.shape[2]
+    rep = cfg.n_heads // kv
+    qh = q.reshape(b, s, kv, rep, cfg.hd)
+    sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh.astype(kg.dtype), kg,
+                    preferred_element_type=F32)
+    sc = sc / math.sqrt(cfg.hd)
+    kpos = jnp.arange(t)
+    mask = kpos[None, :] <= row_pos[:, None]          # (1|B, T)
+    if cfg.window is not None:
+        mask &= kpos[None, :] > row_pos[:, None] - cfg.window
+    sc = jnp.where(mask[:, None, None, None, :], sc, -1e30)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", pattn.astype(vg.dtype), vg,
+                   preferred_element_type=F32)
+    o = o.reshape(b, s, -1).astype(x.dtype)
+    return dense(o, p["wo"]), {"k": ck, "v": cv}
+
+
+def attn_paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int,
+                          dtype) -> PyTree:
+    """Pool-shaped KV cache. ``n_pages`` INCLUDES the scratch page the
+    allocator points inactive slots at (pass pool.n_pages + 1)."""
+    return {
+        "k": jnp.zeros((n_pages, page_size, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((n_pages, page_size, cfg.n_kv, cfg.hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------
 
@@ -391,6 +469,47 @@ def mla_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
     return {
         "c_kv": jnp.zeros((batch, t, cfg.kv_lora), dtype),
         "k_rope": jnp.zeros((batch, t, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+    """MLA decode through paged compressed-KV pools. cache:
+    {c_kv: (N, P, kvl), k_rope: (N, P, rd)}."""
+    b, s, _ = x.shape
+    hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
+    qpos, row_pos = _decode_pos(pos, s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, qpos)
+    cc_pool = paged_write(cache["c_kv"], c_kv, pos, page_table)
+    cr_pool = paged_write(cache["k_rope"], k_rope[:, :, 0], pos, page_table)
+    cc = paged_gather(cc_pool, page_table)     # (B, T, kvl)
+    cr = paged_gather(cr_pool, page_table)     # (B, T, rd)
+    t = cc.shape[1]
+    wkb = p["wk_b"].reshape(cfg.kv_lora, nh, hd)
+    q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(wkb.dtype), wkb,
+                     preferred_element_type=F32)
+    s_c = jnp.einsum("bqhl,bkl->bhqk", q_c.astype(cc.dtype), cc,
+                     preferred_element_type=F32)
+    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(cr.dtype), cr,
+                     preferred_element_type=F32)
+    sc = (s_c + s_r) / math.sqrt(hd + rd)
+    mask = jnp.arange(t)[None, :] <= row_pos[:, None]  # (1|B, T)
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    o_c = jnp.einsum("bhqk,bkl->bqhl", pattn.astype(cc.dtype), cc,
+                     preferred_element_type=F32)
+    wvb = p["wv_b"].reshape(cfg.kv_lora, nh, hd)
+    o = jnp.einsum("bqhl,lhd->bqhd", o_c.astype(wvb.dtype), wvb,
+                   preferred_element_type=F32)
+    o = o.reshape(b, s, -1).astype(x.dtype)
+    return dense(o, p["wo"]), {"c_kv": cc_pool, "k_rope": cr_pool}
+
+
+def mla_paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int,
+                         dtype) -> PyTree:
+    return {
+        "c_kv": jnp.zeros((n_pages, page_size, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((n_pages, page_size, cfg.rope_head_dim),
+                            dtype),
     }
 
 
@@ -721,6 +840,18 @@ def hybrid_apply(p, x, cfg: ModelConfig, *, window=None):
 
 def hybrid_decode(p, x, cfg: ModelConfig, cache, pos):
     ya, attn_cache = attn_decode(p["attn"], x, cfg, cache["attn"], pos)
+    ys, conv, ssm = ssd_block_apply(
+        p["ssd"], x, cfg, conv_state=cache["ssd"]["conv"],
+        ssm_state=cache["ssd"]["ssm"], decode=True)
+    y = 0.5 * (rmsnorm(ya, p["attn_norm"]) + rmsnorm(ys, p["ssd_norm"]))
+    return y, {"attn": attn_cache, "ssd": {"conv": conv, "ssm": ssm}}
+
+
+def hybrid_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+    """Hybrid decode: the attention KV goes through the paged pool, the
+    SSM/conv state (no time dim — nothing to page) stays per-slot."""
+    ya, attn_cache = attn_decode_paged(p["attn"], x, cfg, cache["attn"],
+                                       pos, page_table)
     ys, conv, ssm = ssd_block_apply(
         p["ssd"], x, cfg, conv_state=cache["ssd"]["conv"],
         ssm_state=cache["ssd"]["ssm"], decode=True)

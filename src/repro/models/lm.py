@@ -221,8 +221,16 @@ def forward_loss(params, batch, cfg: ModelConfig, window=None):
     return lm_loss(params, hidden, labels, cfg)
 
 
-def prefill(params, batch, cfg: ModelConfig, window=None):
-    """Process a full prompt; returns last-position logits + KV cache."""
+def prefill(params, batch, cfg: ModelConfig, window=None, last_pos=None):
+    """Process a full prompt; returns last-position logits + KV cache.
+
+    ``last_pos`` (traced scalar, optional) selects which position's
+    logits to return instead of the final one — the prompt-bucketing
+    path right-pads prompts to pow2 shapes (one compiled prefill per
+    bucket instead of per length) and reads the logits at the real
+    prompt end; causal masking makes the right padding invisible to
+    every real position.
+    """
     x, _ = assemble_inputs(params, batch, cfg)
     b, s, _ = x.shape
     cache = init_cache(cfg, b, s, jnp.dtype(cfg.dtype))
@@ -237,7 +245,11 @@ def prefill(params, batch, cfg: ModelConfig, window=None):
 
     x, cache = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.n_layers)))
     hidden = L.rmsnorm(x, params["final_norm"])
-    last = hidden[:, -1]
+    if last_pos is None:
+        last = hidden[:, -1]
+    else:
+        lp = jnp.asarray(last_pos, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(hidden, lp, 1, axis=1)[:, 0]
     logits = jnp.einsum("bd,dv->bv", last.astype(F32),
                         head_weight(params, cfg).astype(F32))
     if logits.shape[-1] != cfg.vocab and not cfg.n_codebooks:
@@ -351,6 +363,66 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
     return logits, new_cache
 
 
+def layer_decode_paged(lp, x, cache_l, pos, page_table, cfg: ModelConfig):
+    """``layer_decode`` with time-keyed cache leaves routed through the
+    paged pool (``serve.paging``); state leaves (SSM/conv) stay
+    per-slot."""
+    h = L.rmsnorm(x, lp["norm1"])
+    if cfg.mixer == "attn":
+        mix, nc = L.attn_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
+                                      page_table)
+    elif cfg.mixer == "mla":
+        mix, nc = L.mla_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
+                                     page_table)
+    elif cfg.mixer == "ssd":
+        # pure-state cache: nothing to page, identical to layer_decode
+        mix, conv, ssm = L.ssd_block_apply(
+            lp["mixer"], h, cfg, conv_state=cache_l["conv"],
+            ssm_state=cache_l["ssm"], decode=True)
+        nc = {"conv": conv, "ssm": ssm}
+    elif cfg.mixer == "hybrid":
+        mix, nc = L.hybrid_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
+                                        page_table)
+    else:  # pragma: no cover
+        raise ValueError(cfg.mixer)
+    x = x + mix
+    if cfg.ffn != "none":
+        h2 = L.rmsnorm(x, lp["norm2"])
+        f = (L.moe_apply(lp["ffn"], h2, cfg) if cfg.ffn == "moe"
+             else L.mlp_apply(lp["ffn"], h2, cfg))
+        x = x + f
+    return x, nc
+
+
+def decode_step_paged(params, cache, tokens, pos, page_table,
+                      cfg: ModelConfig):
+    """One decode token over the slot batch through the paged cache.
+
+    Same contract as :func:`decode_step` (scalar or (B,) ``pos``), but
+    time-keyed cache leaves are page pools shaped (L, N, P, ...) shared
+    by all slots, indexed through ``page_table`` (B, max_pages) — the
+    dense int32 map ``serve.paging.PagePool.device_table`` maintains.
+    The table is identical for every layer, so it rides into the layer
+    scan as a closure constant rather than a scanned input.
+    """
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(carry, inp):
+        lp, cl = inp
+        cl = jax.lax.optimization_barrier(cl)   # see decode_step
+        x_new, nc = layer_decode_paged(lp, carry, cl, pos, page_table, cfg)
+        return x_new, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("btd,dv->btv", hidden.astype(F32),
+                        head_weight(params, cfg).astype(F32))
+    if logits.shape[-1] != cfg.vocab and not cfg.n_codebooks:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    return logits, new_cache
+
+
 def init_cache(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
     """Per-layer decode cache stacked on a leading L axis (scannable)."""
 
@@ -377,3 +449,42 @@ def init_cache(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
 
 def abstract_cache(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
     return jax.eval_shape(lambda: init_cache(cfg, batch, t, dtype))
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     n_slots: int, dtype) -> PyTree:
+    """Paged decode cache, stacked on a leading L axis like init_cache.
+
+    Time-keyed leaves become page pools (L, n_pages + 1, page_size, ...)
+    shared across slots — the +1 is the scratch page inactive slots
+    write/gather through (serve.paging). State leaves (SSM/conv) keep
+    their per-slot (L, n_slots, ...) layout: they carry no time dim, so
+    paging buys them nothing.
+    """
+    pool = n_pages + 1
+
+    def one(_):
+        if cfg.mixer == "attn":
+            c = L.attn_paged_cache_init(cfg, pool, page_size, dtype)
+            return {"k": shard(c["k"], "kv_pages"),
+                    "v": shard(c["v"], "kv_pages")}
+        if cfg.mixer == "mla":
+            c = L.mla_paged_cache_init(cfg, pool, page_size, dtype)
+            return {"c_kv": shard(c["c_kv"], "mla_pages"),
+                    "k_rope": c["k_rope"]}
+        if cfg.mixer == "ssd":
+            return L.ssd_cache_init(cfg, n_slots, dtype)
+        if cfg.mixer == "hybrid":
+            c = L.attn_paged_cache_init(cfg, pool, page_size, dtype)
+            return {"attn": {"k": shard(c["k"], "kv_pages"),
+                             "v": shard(c["v"], "kv_pages")},
+                    "ssd": L.ssd_cache_init(cfg, n_slots, dtype)}
+        raise ValueError(cfg.mixer)
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def abstract_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                         n_slots: int, dtype) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_paged_cache(cfg, n_pages, page_size, n_slots, dtype))

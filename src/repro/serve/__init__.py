@@ -1,31 +1,41 @@
 """repro.serve — batched + continuous-batching inference loops.
 
 ``engine`` owns the device loops (fixed-batch ``generate``, slot-based
-``serve_continuous``, frame-by-frame ``rnn_serve_frames``), all of which
-run sharded under the ``dist`` rules when a mesh is supplied;
-``scheduler`` owns request admission and slot-granular cache reuse.
+``serve_continuous`` — contiguous or paged cache, pow2 prompt-bucketed
+prefill — and frame-by-frame ``rnn_serve_frames``), all of which run
+sharded under the ``dist`` rules when a mesh is supplied; ``scheduler``
+owns request admission and slot-granular cache reuse; ``paging`` owns
+the fixed-size token-page pool (free list + dense page table) behind
+the paged cache.
 """
 from .engine import (
     ServeConfig,
     ServeResult,
+    bucket_len,
     generate,
     rnn_serve_frames,
     serve_continuous,
     shard_cell_params,
 )
+from .paging import PagePool, pages_for
 from .scheduler import (
     Request,
     SlotScheduler,
     cache_len_of,
     evict_slot,
+    evict_slot_state,
+    fit_cache_len,
     grow_cache,
+    insert_paged_cache,
     insert_slot_cache,
     simulate_admission,
 )
 
 __all__ = [
-    "ServeConfig", "ServeResult", "generate", "rnn_serve_frames",
-    "serve_continuous", "shard_cell_params",
+    "ServeConfig", "ServeResult", "bucket_len", "generate",
+    "rnn_serve_frames", "serve_continuous", "shard_cell_params",
+    "PagePool", "pages_for",
     "Request", "SlotScheduler", "cache_len_of", "evict_slot",
-    "grow_cache", "insert_slot_cache", "simulate_admission",
+    "evict_slot_state", "fit_cache_len", "grow_cache",
+    "insert_paged_cache", "insert_slot_cache", "simulate_admission",
 ]

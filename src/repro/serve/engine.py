@@ -7,7 +7,10 @@ with the jitted single-token step (the decode_32k / long_500k workload).
 *slots* fed by :class:`repro.serve.scheduler.SlotScheduler`. Requests
 with mixed prompt lengths arrive over time; a finished request's slot is
 evicted and the next queued prompt prefilled into it mid-decode, so the
-jitted step (compiled once) keeps every slot busy.
+jitted step (compiled once) keeps every slot busy. ``paged=True`` backs
+the slots with the ``serve.paging`` block pool (admission by free
+pages, page-table decode, pow2 prompt-bucketed prefill) instead of
+contiguous worst-case-length slot caches.
 
 ``rnn_serve_frames`` — the paper's own serving shape: frame-by-frame RNN
 inference (one MVM-bound cell step per frame) with CSB-compressed
@@ -47,12 +50,22 @@ from repro.dist import (
 from repro.models import ModelConfig
 from repro.models import lm as LM
 
+from .paging import PagePool, pages_for
 from .scheduler import (
-    Request, SlotScheduler, cache_len_of, evict_slot, grow_cache,
-    insert_slot_cache,
+    Request, SlotScheduler, cache_len_of, evict_slot, evict_slot_state,
+    fit_cache_len, grow_cache, insert_paged_cache, insert_slot_cache,
 )
 
 PyTree = Any
+
+
+def bucket_len(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor): the prefill-shape bucket.
+
+    Padding prompts up to pow2 buckets bounds the number of compiled
+    prefill executables at O(log max_len) for arbitrary length traces
+    (the floor merges the tiny lengths into one bucket)."""
+    return 1 << max(max(n, floor) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,17 +160,30 @@ class _Runner:
                                    else NamedSharding(self.mesh, fitted))
         return self._shardings[ck]
 
-    def prefill(self, tokens: jax.Array):
+    def prefill(self, tokens: jax.Array, last_pos=None):
         with use_rules(self.rules):
-            return self._prefill(self.params, {"tokens": tokens})
+            if last_pos is None:
+                return self._prefill(self.params, {"tokens": tokens})
+            return self._prefill(self.params, {"tokens": tokens},
+                                 last_pos=jnp.asarray(last_pos, jnp.int32))
 
-    def place_cache(self, cache: PyTree) -> PyTree:
+    def place_cache(self, cache: PyTree, paged: bool = False) -> PyTree:
         if self.mesh is None:
             return cache
-        specs = cache_specs(self.cfg, cache, self.mesh, self.policy)
+        specs = cache_specs(self.cfg, cache, self.mesh, self.policy,
+                            paged=paged)
         return jax.tree.map(
             lambda leaf, sp: jax.device_put(
                 leaf, NamedSharding(self.mesh, sp)), cache, specs)
+
+    def place_table(self, table: jax.Array) -> jax.Array:
+        """Page table: replicated — every data replica indexes the whole
+        pool (dist.rules cache_specs keeps pool pages data-parallel;
+        the table must see all of them)."""
+        if self.mesh is None:
+            return table
+        return jax.device_put(table, NamedSharding(
+            self.mesh, P(*([None] * table.ndim))))
 
     def place_tokens(self, tokens: jax.Array) -> jax.Array:
         if self.mesh is None:
@@ -193,6 +219,15 @@ class _Runner:
             self._steps[jnp.ndim(pos)] = fn
         with use_rules(self.rules):
             return fn(self.params, cache, tokens, pos)
+
+    def step_paged(self, cache, tokens, pos, page_table):
+        fn = self._steps.get(("paged", jnp.ndim(pos)))
+        if fn is None:
+            fn = jax.jit(partial(LM.decode_step_paged, cfg=self.cfg),
+                         donate_argnums=(1,))
+            self._steps[("paged", jnp.ndim(pos))] = fn
+        with use_rules(self.rules):
+            return fn(self.params, cache, tokens, pos, page_table)
 
 
 def _sampler(cfg: ModelConfig, temperature: float):
@@ -265,25 +300,54 @@ class ServeResult:
 def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                      *, n_slots: int = 4, temperature: float = 0.0,
                      cache_len: int | None = None, mesh=None, policy=None,
-                     rng: jax.Array | None = None) -> ServeResult:
+                     rng: jax.Array | None = None,
+                     paged: bool = False, page_size: int = 16,
+                     pool_pages: int | None = None,
+                     bucket_prompts: bool | None = None) -> ServeResult:
     """Serve ``requests`` (mixed prompt lengths, arriving over time)
     through ``n_slots`` continuously-batched decode slots.
 
     The decode step compiles once for the (n_slots, cache_len) shapes
     and runs every step with per-slot positions; admission prefills each
-    arrived prompt at its natural length (one compile per distinct
-    length) and writes its cache into the freed slot. Greedy decoding
-    (``temperature=0``) matches ``generate`` token-for-token, sharded
-    or not.
+    arrived prompt and writes its cache into the freed slot. Greedy
+    decoding (``temperature=0``) matches ``generate`` token-for-token,
+    sharded or not, paged or not.
+
+    ``paged=True`` swaps the contiguous per-slot cache for a shared
+    pool of ``pool_pages`` fixed-size token pages (``page_size`` each;
+    default pool = full contiguous capacity). Slots map logical
+    positions to physical pages through a dense page table
+    (``serve.paging``); admission goes **by free pages, not free
+    slots**, each request reserving only its own worst case — a
+    mixed-length trace packs more concurrent requests into the same
+    token budget than contiguous slots allow (pass a smaller
+    ``pool_pages`` to cap the budget). Pages free mid-decode the moment
+    a request finishes.
+
+    ``bucket_prompts`` (default: on when paged) right-pads each prompt
+    to a pow2 **bucket** before prefill, so a trace of arbitrary
+    lengths compiles O(log max_len) prefill executables instead of one
+    per distinct length. Causal attention makes right padding invisible
+    to real positions, so sampled tokens are unchanged; SSD/hybrid
+    mixers scan pad tokens into their recurrent state, so bucketing
+    auto-disables there.
     """
     if cfg.n_codebooks:
         raise NotImplementedError(
             "serve_continuous drives single-stream token ids; codebook "
             "models go through generate()")
+    bucket = bucket_prompts if bucket_prompts is not None else paged
+    bucket = bucket and cfg.mixer in ("attn", "mla")
     if not requests:
         stats = SlotScheduler(n_slots).stats()
-        stats.update(cache_len=0, tokens_per_sec=0.0,
+        stats.update(cache_len=0, tokens_per_sec=0.0, paged=paged,
+                     bucketed_prefill=bucket,
                      sharded=_resolve_mesh(mesh) is not None)
+        if paged:
+            stats["paging"] = PagePool(
+                page_size, 1 if pool_pages is None else pool_pages,
+                n_slots, 1).summary()
+            stats["page_stalls"] = 0
         return ServeResult({}, stats, 0.0)
     cache_len = cache_len or max(
         r.prompt_len + r.max_new_tokens for r in requests)
@@ -298,24 +362,69 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     sample = _sampler(cfg, temperature)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
 
-    sched = SlotScheduler(n_slots)
+    pool = None
+    if paged:
+        max_pages = pages_for(cache_len, page_size)
+        # explicit pool_pages=0 must reject (PagePool raises), not
+        # silently fall back to the full contiguous footprint
+        n_pool = (n_slots * max_pages if pool_pages is None
+                  else pool_pages)
+        pool = PagePool(page_size, n_pool, n_slots, max_pages)
+    sched = SlotScheduler(n_slots, pool=pool)
     for r in requests:
         sched.submit(r)
 
-    cache = runner.place_cache(
-        LM.init_cache(cfg, n_slots, cache_len, jnp.dtype(cfg.dtype)))
+    if paged:
+        cache = runner.place_cache(
+            LM.init_paged_cache(cfg, pool.n_pages, page_size, n_slots,
+                                jnp.dtype(cfg.dtype)), paged=True)
+    else:
+        cache = runner.place_cache(
+            LM.init_cache(cfg, n_slots, cache_len, jnp.dtype(cfg.dtype)))
     cur = jnp.zeros((n_slots, 1), jnp.int32)
+    # device-placed page table, refreshed only when the pool remaps a
+    # page (device_table() returns a cached identical object when
+    # clean, so identity is the dirty signal) — keeps the redundant
+    # host->device put off the gated per-token path
+    table_host = table_placed = None
 
     t0 = time.perf_counter()
     while sched.has_work():
         for slot, req in sched.admit():
             rng, k = jax.random.split(rng)
-            logits, req_cache = runner.prefill(
-                jnp.asarray(np.asarray(req.tokens))[None])
+            tokens = np.asarray(req.tokens)
+            plen = req.prompt_len
+            if bucket:
+                pad = bucket_len(plen) - plen
+                tokens = np.pad(tokens, [(0, pad)] + [(0, 0)] * (
+                    tokens.ndim - 1))
+                logits, req_cache = runner.prefill(
+                    jnp.asarray(tokens)[None], last_pos=plen - 1)
+            else:
+                logits, req_cache = runner.prefill(jnp.asarray(tokens)[None])
             first = int(np.asarray(sample(logits, k)).reshape(-1)[0])
             if sched.started(slot, first):
-                cache = insert_slot_cache(
-                    cache, runner.place_slot_cache(req_cache), slot)
+                if paged:
+                    pool.ensure(slot, plen)
+                    phys = list(pool.slot_pages(slot))
+                    # pad the page list to a pow2 count with the scratch
+                    # page so the jitted insert compiles O(log max_pages)
+                    # variants, not one per distinct prompt page count
+                    # (scratch swallows the surplus pad pages harmlessly)
+                    n_pad = 1 << max(len(phys) - 1, 0).bit_length()
+                    phys += [pool.scratch_page] * (n_pad - len(phys))
+                    req_cache = fit_cache_len(
+                        req_cache, len(phys) * page_size)
+                    cache = insert_paged_cache(
+                        cache, runner.place_slot_cache(req_cache),
+                        phys, slot)
+                else:
+                    if bucket:
+                        # drop pad positions; decode overwrites each
+                        # position before the mask ever exposes it
+                        req_cache = fit_cache_len(req_cache, plen)
+                    cache = insert_slot_cache(
+                        cache, runner.place_slot_cache(req_cache), slot)
                 cur = cur.at[slot, 0].set(first)
             # max_new_tokens == 1: finished off the prefill alone; the
             # slot never enters the decode batch, nothing to insert
@@ -324,17 +433,35 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
             sched.idle_tick()
             continue
         rng, k = jax.random.split(rng)
-        pos = runner.place_pos(jnp.asarray(sched.positions()))
-        lg, cache = runner.step(cache, runner.place_tokens(cur), pos)
+        pos_host = sched.positions()
+        pos = runner.place_pos(jnp.asarray(pos_host))
+        if paged:
+            # alloc-on-grow: map the page each live slot writes this step
+            for i in np.flatnonzero(active):
+                pool.ensure(int(i), int(pos_host[i]) + 1)
+            pool.tick()
+            fresh = pool.device_table()
+            if fresh is not table_host:
+                table_host = fresh
+                table_placed = runner.place_table(fresh)
+            lg, cache = runner.step_paged(cache, runner.place_tokens(cur),
+                                          pos, table_placed)
+        else:
+            lg, cache = runner.step(cache, runner.place_tokens(cur), pos)
         nxt = sample(lg[:, -1], k)
         for slot in sched.advance(np.asarray(nxt)):
-            cache = evict_slot(cache, slot)
+            # pages went back to the allocator inside the scheduler;
+            # per-slot SSM/conv state still needs the device-side zero
+            cache = (evict_slot_state(cache, slot) if paged
+                     else evict_slot(cache, slot))
         cur = nxt[:, None].astype(jnp.int32)
     jax.block_until_ready(cache)
     wall = time.perf_counter() - t0
 
     stats = sched.stats()
     stats["cache_len"] = cache_len
+    stats["paged"] = paged
+    stats["bucketed_prefill"] = bucket
     stats["tokens_per_sec"] = round(
         stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
     stats["sharded"] = runner.mesh is not None

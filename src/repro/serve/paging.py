@@ -1,0 +1,242 @@
+"""Paged KV/state cache: a block-pool allocator for serve slots.
+
+The contiguous serve cache gives every decode slot the worst-case time
+footprint (``n_slots x cache_len`` tokens) even when most requests are
+short — the same waste the paper removes from *weights* by packing
+irregular sparsity into fixed-size blocks (CSB §4). This module applies
+that regular-block philosophy to *activations*: the cache becomes a pool
+of fixed-size token **pages** shared by all slots, and each slot maps
+its logical positions onto physical pages through a dense page table.
+
+Design points (all jit-friendliness driven):
+
+* The page table is a dense ``(n_slots, max_pages)`` int32 array —
+  passed straight into the jitted decode step, no ragged host structure
+  crosses the trace boundary. Free entries hold ``-1`` on the host;
+  :meth:`device_table` maps them to a dedicated **scratch page** (index
+  ``n_pages``, one extra physical page the pools allocate beyond the
+  allocator's range) so inactive slots write/gather somewhere harmless
+  without any masking inside the step.
+* **Reservation-based admission**: a request reserves its own worst case
+  (``ceil((prompt + max_new) / page_size)`` pages) when admitted, and
+  physical pages are allocated lazily as the position advances
+  (:meth:`ensure`). Admission is bounded by *per-request* need, not the
+  global max length — mixed-length traces pack more concurrent requests
+  into the same token budget than contiguous slots can — and a slot can
+  never stall mid-decode waiting for a page (no deadlock by
+  construction).
+* Pages are freed the moment a request finishes (:meth:`release`),
+  mid-decode, and immediately reusable. Freed pages are NOT zeroed: the
+  decode mask (``kpos <= pos``) plus the write-before-unmask order means
+  a successor can never attend a predecessor's stale KV (see
+  serve.scheduler's eviction notes; per-slot SSM/conv state, which has
+  no mask, is still zeroed by the engine).
+
+Host-side only — the device half (paged write/gather, page-granular
+insert) lives in ``models.layers`` / ``serve.scheduler``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` (0 tokens still needs 0 pages)."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Running occupancy/fragmentation telemetry (sampled via tick())."""
+
+    peak_pages: int = 0
+    ticks: int = 0
+    page_steps: int = 0          # sum over ticks of allocated pages
+    frag_weighted: float = 0.0   # sum over ticks of internal-frag fraction
+
+    def as_dict(self) -> dict:
+        return {
+            "peak_pages": self.peak_pages,
+            "mean_pages": round(self.page_steps / self.ticks, 2)
+            if self.ticks else 0.0,
+            "internal_fragmentation": round(
+                self.frag_weighted / self.ticks, 4) if self.ticks else 0.0,
+        }
+
+
+class PagePool:
+    """Fixed-size token-page allocator behind the serve decode slots.
+
+    ``n_pages``  — allocatable pool capacity (the scratch page the device
+                   pools carry at index ``n_pages`` is NOT part of it).
+    ``max_pages``— page-table width: the most pages one slot may ever
+                   hold (``ceil(cache_len / page_size)``); bounds the
+                   logical time extent the decode step gathers.
+    """
+
+    def __init__(self, page_size: int, n_pages: int, n_slots: int,
+                 max_pages: int):
+        if page_size < 1 or n_pages < 1 or n_slots < 1 or max_pages < 1:
+            raise ValueError("page_size, n_pages, n_slots, max_pages "
+                             "must all be >= 1")
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.n_slots = n_slots
+        self.max_pages = max_pages
+        # LIFO free list: recently freed pages are reused first (their
+        # device-side contents are hottest in cache)
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._table = [[-1] * max_pages for _ in range(n_slots)]
+        self._n_alloc = [0] * n_slots     # physical pages held per slot
+        self._reserved = [0] * n_slots    # admission reservation per slot
+        self._tokens = [0] * n_slots      # tokens ensure()d per slot
+        self.stats = PoolStats()
+        self._dirty = True
+        self._device_table = None
+
+    # -- capacity / admission ------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def reserved_total(self) -> int:
+        return sum(self._reserved)
+
+    def allocated_total(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def available(self) -> int:
+        """Pages admission may still promise (reservations included)."""
+        return self.n_pages - self.reserved_total()
+
+    def fits_ever(self, n_tokens: int) -> bool:
+        """Could a request of this total length EVER be admitted?"""
+        need = self.pages_needed(n_tokens)
+        return need <= min(self.n_pages, self.max_pages)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        need = self.pages_needed(n_tokens)
+        return need <= self.max_pages and need <= self.available()
+
+    # -- slot lifecycle ------------------------------------------------------
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Admission: promise the slot its worst-case page count."""
+        if self._reserved[slot]:
+            raise RuntimeError(f"slot {slot} already holds a reservation")
+        need = self.pages_needed(n_tokens)
+        if not self.can_admit(n_tokens):
+            raise RuntimeError(
+                f"cannot reserve {need} pages for slot {slot}: "
+                f"{self.available()} available, max_pages={self.max_pages}")
+        self._reserved[slot] = need
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow the slot's allocation to cover ``n_tokens`` positions.
+        Returns True when the page table changed (new pages mapped)."""
+        need = self.pages_needed(n_tokens)
+        if need > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: ensure({n_tokens}) needs {need} pages but "
+                f"only {self._reserved[slot]} are reserved")
+        self._tokens[slot] = max(self._tokens[slot], n_tokens)
+        grew = False
+        while self._n_alloc[slot] < need:
+            # reservation accounting guarantees the free list is non-empty
+            page = self._free.pop()
+            self._table[slot][self._n_alloc[slot]] = page
+            self._n_alloc[slot] += 1
+            grew = True
+        if grew:
+            self._dirty = True
+            self.stats.peak_pages = max(self.stats.peak_pages,
+                                        self.allocated_total())
+        return grew
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """Physical pages currently mapped for the slot, in logical order."""
+        return self._table[slot][: self._n_alloc[slot]]
+
+    def release(self, slot: int) -> list[int]:
+        """Finish/evict: return the slot's pages to the free list and drop
+        its reservation. Returns the freed physical page ids."""
+        freed = self.slot_pages(slot)
+        self._free.extend(reversed(freed))
+        self._table[slot] = [-1] * self.max_pages
+        self._n_alloc[slot] = 0
+        self._reserved[slot] = 0
+        self._tokens[slot] = 0
+        if freed:
+            self._dirty = True
+        return freed
+
+    # -- device view ---------------------------------------------------------
+    @property
+    def scratch_page(self) -> int:
+        """Physical index of the write-sink page (see module docstring)."""
+        return self.n_pages
+
+    def device_table(self):
+        """(n_slots, max_pages) int32 jnp array; free entries -> scratch.
+        Cached between calls until an alloc/release dirties it."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        if self._dirty or self._device_table is None:
+            t = np.asarray(self._table, np.int32)
+            t[t < 0] = self.scratch_page
+            self._device_table = jnp.asarray(t)
+            self._dirty = False
+        return self._device_table
+
+    # -- telemetry -----------------------------------------------------------
+    def tick(self) -> None:
+        """Sample occupancy/fragmentation once per decode step."""
+        alloc = self.allocated_total()
+        used = sum(self._tokens)
+        cap = alloc * self.page_size
+        self.stats.ticks += 1
+        self.stats.page_steps += alloc
+        if cap:
+            self.stats.frag_weighted += 1.0 - used / cap
+
+    def fragmentation(self) -> float:
+        """Instantaneous internal fragmentation: the fraction of
+        allocated page capacity not holding a live token."""
+        cap = self.allocated_total() * self.page_size
+        return (1.0 - sum(self._tokens) / cap) if cap else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "max_pages": self.max_pages,
+            **self.stats.as_dict(),
+        }
+
+    # -- invariants (the fuzz suite's oracle) --------------------------------
+    def check(self) -> None:
+        """Assert every allocator invariant; raises AssertionError on the
+        first violation. O(n_pages) — called after every event by the
+        property tests, cheap enough to leave on in simulations."""
+        live = [p for row, n in zip(self._table, self._n_alloc)
+                for p in row[:n]]
+        # no page is mapped by two live slots (aliasing) or twice
+        assert len(live) == len(set(live)), "page aliased across slots"
+        # free list holds no duplicates and no live page (double-free
+        # would put a live page back on the list)
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list duplicate"
+        assert not (free & set(live)), "live page on the free list"
+        # conservation: every page is exactly free or live (no leak)
+        assert len(self._free) + len(live) == self.n_pages, "page leaked"
+        for s in range(self.n_slots):
+            row = self._table[s]
+            n = self._n_alloc[s]
+            assert all(0 <= p < self.n_pages for p in row[:n])
+            assert all(p == -1 for p in row[n:]), "stale table entry"
+            assert n <= self._reserved[s] <= self.max_pages
+            assert self.pages_needed(self._tokens[s]) <= n
+        # admission never over-promises the pool
+        assert self.reserved_total() <= self.n_pages, "over-admitted"
+
+
+__all__ = ["PagePool", "PoolStats", "pages_for"]

@@ -75,6 +75,24 @@ def grow_cache(cache: PyTree, extra: int) -> PyTree:
     return jax.tree_util.tree_map_with_path(grow, cache)
 
 
+def fit_cache_len(cache: PyTree, t: int) -> PyTree:
+    """Grow or truncate every time-keyed leaf to exactly ``t`` time
+    positions (the paged insert needs a whole number of pages)."""
+    cur = cache_len_of(cache)
+    if cur < t:
+        return grow_cache(cache, t - cur)
+    if cur == t:
+        return cache
+
+    def cut(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS and leaf.ndim >= 3:
+            return leaf[:, :, :t]
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(cut, cache)
+
+
 # ---------------------------------------------------------------------------
 # slot-granular cache ops (device side)
 # ---------------------------------------------------------------------------
@@ -119,6 +137,69 @@ def evict_slot(batch_cache: PyTree, slot: int) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# paged-cache slot ops (device side; serve.paging owns the page table)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _insert_paged(batch_cache: PyTree, slot_cache: PyTree, phys, slot):
+    def one(path, b, u):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS and u.ndim >= 3:
+            # b: (L, N_pool, P, ...) pool; u: (L, 1, n*P, ...) request
+            l, psz = b.shape[0], b.shape[2]
+            n = phys.shape[0]
+            pages = u[:, 0].reshape((l, n, psz) + u.shape[3:])
+            return b.at[:, phys].set(pages.astype(b.dtype))
+        # state leaf: per-slot layout, same write as the contiguous path
+        starts = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, u.astype(b.dtype), starts)
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache, slot_cache)
+
+
+def insert_paged_cache(batch_cache: PyTree, slot_cache: PyTree,
+                       phys_pages, slot: int) -> PyTree:
+    """Write a prefilled single-request cache into the paged batch cache.
+
+    Time-keyed leaves of ``slot_cache`` must span exactly
+    ``len(phys_pages) * page_size`` positions (``fit_cache_len``); each
+    logical page i lands in physical page ``phys_pages[i]`` across all
+    layers at once. Pages are fully overwritten, so a recycled page
+    carries nothing of its previous tenant below the decode position
+    (beyond it, the ``kpos <= pos`` mask applies — see serve.paging).
+    State leaves write into batch slot ``slot`` as in
+    :func:`insert_slot_cache`. Retraces once per distinct page count;
+    the engine pads ``phys_pages`` to a pow2 count with the pool's
+    scratch page so the variants stay O(log max_pages).
+    """
+    return _insert_paged(batch_cache, slot_cache,
+                         jnp.asarray(phys_pages, jnp.int32),
+                         jnp.asarray(slot, jnp.int32))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _evict_state(batch_cache: PyTree, slot):
+    def one(path, b):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS:
+            return b            # pool leaf: pages freed by the allocator
+        upd = jnp.zeros((b.shape[0], 1) + b.shape[2:], b.dtype)
+        starts = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, upd, starts)
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache)
+
+
+def evict_slot_state(batch_cache: PyTree, slot: int) -> PyTree:
+    """Paged eviction: zero only the per-slot state leaves (SSM/conv —
+    they carry no position mask, so they MUST be cleared). The KV pages
+    themselves just return to the allocator's free list; the decode
+    mask plus page-granular overwrite keeps them unleakable without a
+    device-side zero (serve.paging module docstring)."""
+    return _evict_state(batch_cache, jnp.asarray(slot, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # host-side scheduling
 # ---------------------------------------------------------------------------
 
@@ -152,12 +233,23 @@ class _Slot:
 class SlotScheduler:
     """Admission + slot bookkeeping. Drives nothing itself — the engine
     (or :func:`simulate_admission`) owns the loop and tells the
-    scheduler what happened."""
+    scheduler what happened.
 
-    def __init__(self, n_slots: int):
+    With a :class:`repro.serve.paging.PagePool` attached, admission is
+    **by free pages, not free slots**: a free slot only takes a request
+    when the pool can reserve its worst-case page count, and a finished
+    request's pages return to the pool inside :meth:`_finish` (so
+    scheduler and allocator can never disagree about liveness — the
+    fuzz suite leans on this). The engine still owns physical page
+    growth (``pool.ensure``) because only it knows when device writes
+    happen.
+    """
+
+    def __init__(self, n_slots: int, pool=None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
+        self.pool = pool
         self.now = 0                  # decode-step clock
         self._pending: list[Request] = []
         self._slots: list[_Slot | None] = [None] * n_slots
@@ -166,11 +258,20 @@ class SlotScheduler:
         self.decode_steps = 0
         self.idle_steps = 0
         self.active_slot_steps = 0
+        self.peak_active = 0
+        self.page_stalls = 0          # admissions deferred for pages
 
     # -- submission / admission --------------------------------------------
     def submit(self, req: Request) -> None:
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.pool is not None and not self.pool.fits_ever(
+                req.prompt_len + req.max_new_tokens):
+            raise ValueError(
+                f"request {req.rid} needs "
+                f"{self.pool.pages_needed(req.prompt_len + req.max_new_tokens)}"
+                f" pages and can never fit the pool "
+                f"({self.pool.n_pages} pages, {self.pool.max_pages}/slot)")
         self._pending.append(req)
         self._pending.sort(key=lambda r: (r.arrival, r.rid))
 
@@ -181,7 +282,12 @@ class SlotScheduler:
     def admit(self) -> list[tuple[int, Request]]:
         """Fill free slots with arrived requests (FIFO by arrival).
         The engine must prefill each returned request and then call
-        :meth:`started` with the token its prefill produced."""
+        :meth:`started` with the token its prefill produced.
+
+        Paged: the FIFO head must fit the pool's available pages or
+        admission stops for this step (strict FIFO — no later request
+        jumps a starved head, so admission order stays deterministic and
+        starvation-free; pages drain back as running requests finish)."""
         out = []
         for i in range(self.n_slots):
             if self._slots[i] is not None:
@@ -190,10 +296,18 @@ class SlotScheduler:
                        None)
             if req is None:
                 break
+            total = req.prompt_len + req.max_new_tokens
+            if self.pool is not None and not self.pool.can_admit(total):
+                self.page_stalls += 1
+                break
             self._pending.remove(req)
+            if self.pool is not None:
+                self.pool.reserve(i, total)
             self._slots[i] = _Slot(rid=req.rid, pos=req.prompt_len,
                                    remaining=req.max_new_tokens)
             out.append((i, req))
+        self.peak_active = max(self.peak_active, sum(
+            s is not None for s in self._slots))
         return out
 
     def started(self, slot: int, first_token: int) -> bool:
@@ -249,6 +363,8 @@ class SlotScheduler:
         s = self._slots[slot]
         self.results[s.rid] = s.generated
         self._slots[slot] = None
+        if self.pool is not None:
+            self.pool.release(slot)
 
     # -- reporting -----------------------------------------------------------
     def occupancy(self) -> float:
@@ -258,33 +374,54 @@ class SlotScheduler:
         return self.active_slot_steps / total if total else 0.0
 
     def stats(self) -> dict:
-        return {
+        out = {
             "slots": self.n_slots,
             "requests": len(self.results),
             "generated_tokens": sum(len(v) for v in self.results.values()),
             "prefills": self.prefills,
             "decode_steps": self.decode_steps,
             "idle_steps": self.idle_steps,
+            "peak_active": self.peak_active,
             "occupancy": round(self.occupancy(), 4),
         }
+        if self.pool is not None:
+            out["page_stalls"] = self.page_stalls
+            out["paging"] = self.pool.summary()
+        return out
 
 
-def simulate_admission(n_slots: int, requests: list[Request]) -> dict:
+def simulate_admission(n_slots: int, requests: list[Request],
+                       pool=None) -> dict:
     """Modelless replay of the admission policy: how well do ``n_slots``
     stay occupied for this trace? Used by launch/dryrun.py to record the
     achieved occupancy a decode cell's slot count implies, and by tests
-    (no devices, no model — pure host bookkeeping)."""
-    sched = SlotScheduler(n_slots)
+    (no devices, no model — pure host bookkeeping).
+
+    With a ``pool`` (:class:`repro.serve.paging.PagePool`) the replay
+    also drives page reservation/growth/release exactly as the engine
+    would, so the returned stats carry page occupancy and internal
+    fragmentation for the trace — the dryrun ``serve.paged`` record.
+    """
+    sched = SlotScheduler(n_slots, pool=pool)
     for r in requests:
         sched.submit(r)
     guard = sum(r.max_new_tokens for r in requests) + sum(
         r.arrival for r in requests) + len(requests) + 1
     while sched.has_work():
-        for slot, _req in sched.admit():
+        for slot, req in sched.admit():
+            if pool is not None:
+                pool.ensure(slot, req.prompt_len)
             sched.started(slot, 0)
         if not sched.active_mask().any():
             sched.idle_tick()
             continue
+        if pool is not None:
+            active = sched.active_mask()
+            pos = sched.positions()
+            for i in range(n_slots):
+                if active[i]:
+                    pool.ensure(i, int(pos[i]) + 1)
+            pool.tick()
         sched.advance(np.zeros(n_slots, np.int64))
         guard -= 1
         if guard < 0:  # pragma: no cover - scheduler invariant broken
@@ -294,5 +431,7 @@ def simulate_admission(n_slots: int, requests: list[Request]) -> dict:
 
 __all__ = [
     "Request", "SlotScheduler", "simulate_admission",
-    "cache_len_of", "grow_cache", "insert_slot_cache", "evict_slot",
+    "cache_len_of", "fit_cache_len", "grow_cache",
+    "insert_slot_cache", "insert_paged_cache",
+    "evict_slot", "evict_slot_state",
 ]

@@ -1,10 +1,11 @@
 """Deterministic stand-in for ``hypothesis`` (the container may lack it).
 
-Implements just the surface the CSB property tests use — ``given`` with
-keyword strategies, ``settings``, ``strategies.floats`` /
-``strategies.sampled_from`` — by enumerating a small fixed sample grid
-instead of random search. Property coverage degrades gracefully rather
-than the whole module failing at collection.
+Implements just the surface the CSB + paging property tests use —
+``given`` with keyword strategies, ``settings``, ``strategies.floats``
+/ ``strategies.integers`` / ``strategies.sampled_from`` — by
+enumerating a small fixed sample grid instead of random search.
+Property coverage degrades gracefully rather than the whole module
+failing at collection.
 """
 from __future__ import annotations
 
@@ -29,6 +30,14 @@ class strategies:  # noqa: N801 — mirrors the hypothesis module name
         return _Strategy(lambda i: min_value + span
                          * ((i * 0.381966 + 0.051) % 1.0
                             if i > 1 else float(i)))
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        span = max_value - min_value
+        # endpoints first, then a low-discrepancy interior sweep
+        return _Strategy(lambda i: min_value + (
+            span if i == 1 else 0 if i == 0
+            else int(span * ((i * 0.381966 + 0.051) % 1.0))))
 
     @staticmethod
     def sampled_from(seq) -> _Strategy:

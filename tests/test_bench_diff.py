@@ -1,0 +1,115 @@
+"""benchmarks/diff.py gate edges.
+
+The CI perf gate must fail ONLY on a genuine regression in a gated row:
+tables/rows missing on either side, informational (us_per_call = 0,
+``derived``-only) rows, and calibration blips must never trip it. The
+paged serve row is gated like every other ``serve:/us_per`` row — an
+injected 1.5x regression must fail, and must keep failing when it hides
+behind a favorable calibration misread (the min(raw, norm) rule).
+"""
+import pytest
+
+from benchmarks.diff import diff_records
+
+
+def _rec(name, rows, calib=100.0):
+    return {name: {"bench": name, "calib_us": calib,
+                   "rows": [{"name": n, "us_per_call": us, "derived": d}
+                            for n, us, d in rows]}}
+
+
+BASE = _rec("serve", [
+    ("serve/paged/us_per_token", 1000.0, 100.0),
+    ("serve/continuous/us_per_token", 900.0, 110.0),
+    ("serve/paged/peak_cache_tokens", 0.0, "paged=96;contiguous=256"),
+])
+
+
+def test_missing_baseline_table_is_informational():
+    fresh = _rec("serve", [("serve/paged/us_per_token", 9000.0, 11.0)])
+    lines, failures = diff_records(fresh, {}, 0.25, {"serve"}, 50.0)
+    assert failures == []
+    assert any("[new]" in ln and "serve" in ln for ln in lines)
+
+
+def test_baseline_table_without_fresh_run_is_informational():
+    lines, failures = diff_records({}, BASE, 0.25, {"serve"}, 50.0)
+    assert failures == []
+    assert any("[missing]" in ln for ln in lines)
+
+
+def test_fresh_row_absent_from_baseline_never_gates():
+    """A brand-new gated-pattern row (no baseline) reports as [new] and
+    a vanished row as [gone]; neither fails the gate."""
+    fresh = _rec("serve", [
+        ("serve/paged/us_per_token", 1000.0, 100.0),
+        ("serve/paged_v2/us_per_token", 99999.0, 1.0),   # new, huge: ok
+    ])
+    lines, failures = diff_records(fresh, BASE, 0.25, {"serve"}, 50.0)
+    assert failures == []
+    assert any("[new] serve/paged_v2/us_per_token" in ln for ln in lines)
+    assert any("[gone] serve/continuous/us_per_token" in ln
+               for ln in lines)
+
+
+def test_derived_only_rows_report_but_never_gate():
+    """us_per_call == 0 rows (occupancy, memory footprint) carry their
+    payload in ``derived``; numeric drift is reported, string payloads
+    and any size of drift never fail CI."""
+    base = _rec("serve", [
+        ("serve/paged/peak_cache_tokens", 0.0, "paged=96;contiguous=256"),
+        ("serve/continuous/occupancy", 0.0, 0.9),
+    ])
+    fresh = _rec("serve", [
+        ("serve/paged/peak_cache_tokens", 0.0, "paged=200;contiguous=256"),
+        ("serve/continuous/occupancy", 0.0, 0.3),        # 3x collapse
+    ])
+    lines, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
+    assert failures == []
+    assert any("derived 0.9 -> 0.3" in ln for ln in lines)
+
+
+def test_injected_paged_regression_fails_gate():
+    """Acceptance: a 1.5x slowdown on serve/paged/us_per_token trips the
+    25% gate; 1.1x does not."""
+    fresh = _rec("serve", [
+        ("serve/paged/us_per_token", 1500.0, 66.0),
+        ("serve/continuous/us_per_token", 990.0, 100.0),
+    ])
+    _, failures = diff_records(fresh, BASE, 0.25, {"serve"}, 50.0)
+    assert len(failures) == 1
+    assert "serve/paged/us_per_token" in failures[0]
+
+    ok = _rec("serve", [("serve/paged/us_per_token", 1100.0, 91.0)])
+    _, failures = diff_records(ok, BASE, 0.25, {"serve"}, 50.0)
+    assert failures == []
+
+
+def test_calibration_blip_cannot_fail_alone():
+    """raw 1.5x but the fresh calibration says the machine is 2x slower
+    -> normalized 0.75x: a slow runner, not a regression. And a fast
+    machine (calib 0.5x) with raw exactly 1.0x -> normalized 2x: a
+    calibration misread, raw ratio vetoes the failure."""
+    slow = _rec("serve", [("serve/paged/us_per_token", 1500.0, 66.0)],
+                calib=200.0)
+    _, failures = diff_records(slow, BASE, 0.25, {"serve"}, 50.0)
+    assert failures == []
+    fast = _rec("serve", [("serve/paged/us_per_token", 1000.0, 100.0)],
+                calib=50.0)
+    _, failures = diff_records(fast, BASE, 0.25, {"serve"}, 50.0)
+    assert failures == []
+
+
+def test_noise_floor_rows_never_gate():
+    base = _rec("serve", [("serve/paged/us_per_token", 10.0, 1.0)])
+    fresh = _rec("serve", [("serve/paged/us_per_token", 40.0, 0.2)])
+    _, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
+    assert failures == []       # 40us < --min-us 50us floor
+
+
+@pytest.mark.parametrize("gate_tables,expect", [({"serve"}, 1), (set(), 0),
+                                                ({"kernel"}, 0)])
+def test_gate_scope_respects_table_selection(gate_tables, expect):
+    fresh = _rec("serve", [("serve/paged/us_per_token", 2000.0, 50.0)])
+    _, failures = diff_records(fresh, BASE, 0.25, gate_tables, 50.0)
+    assert len(failures) == expect
