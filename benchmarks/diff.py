@@ -23,10 +23,12 @@ swing the verdict by more than that.
 
 The ``kernel`` and ``serve`` tables gate by default (--gate), and
 within a gated table only rows matching its --gate-row pattern gate
-(default "kernel:/mvm,serve:/us_per" — kernel MVM latencies plus the
-serve per-token/per-frame rows; oracle timings, static ratios and
-occupancy rows are informational). A bare substring (no ":") applies
-to every gated table. Serve rows carry latency in ``us_per_call``
+(default "kernel:/mvm|paged_attn/decode,serve:/us_per" — kernel MVM
+and paged-attention decode latencies plus the serve
+per-token/per-frame rows; oracle timings, static ratios and occupancy
+rows are informational). ``|`` separates alternative substrings for
+one table (any match gates); a bare substring (no ":") applies to
+every gated table. Serve rows carry latency in ``us_per_call``
 (us/token, us/frame) with the throughput (tokens/sec) in ``derived``,
 so one rule — "us_per_call regressed >threshold" — gates both a
 tokens/sec collapse and a frame-latency blowup. Rows below --min-us
@@ -66,23 +68,24 @@ def _rows_by_name(rec: dict) -> dict[str, dict]:
     return {r["name"]: r for r in rec.get("rows", [])}
 
 
-def parse_gate_rows(arg: str) -> dict[str, str]:
-    """``"kernel:/mvm,serve:/us_per"`` -> per-table row substrings; a
-    bare entry (no ":") becomes the fallback for every table ("*")."""
-    out: dict[str, str] = {}
+def parse_gate_rows(arg: str) -> dict[str, tuple[str, ...]]:
+    """``"kernel:/mvm|paged_attn/decode,serve:/us_per"`` -> per-table
+    row substring alternatives (``|``-separated; a row gates when ANY
+    of its table's substrings matches); a bare entry (no ":") becomes
+    the fallback for every table ("*")."""
+    out: dict[str, tuple[str, ...]] = {}
     for part in (p for p in arg.split(",") if p):
         table, sep, sub = part.partition(":")
-        if sep:
-            out[table] = sub
-        else:
-            out["*"] = part
+        subs = tuple(s for s in (sub if sep else part).split("|") if s)
+        out[table if sep else "*"] = subs
     return out
 
 
 def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                  threshold: float, gate_tables: set[str],
                  min_us: float,
-                 gate_row: str = "kernel:/mvm,serve:/us_per",
+                 gate_row: str = "kernel:/mvm|paged_attn/decode,"
+                 "serve:/us_per",
                  ) -> tuple[list[str], list[str]]:
     """Returns (report lines, gate failures)."""
     gate_rows = parse_gate_rows(gate_row)
@@ -117,8 +120,9 @@ def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                 norm = raw / scale
                 delta = (norm - 1.0) * 100
                 mark = ""
-                sub = gate_rows.get(name, gate_rows.get("*", ""))
-                row_gates = gated and (not sub or sub in rname)
+                subs = gate_rows.get(name, gate_rows.get("*", ()))
+                row_gates = gated and (
+                    not subs or any(s in rname for s in subs))
                 # both ratios must regress: raw-only = calibration blip,
                 # normalized-only = slower machine (see module docstring)
                 if (row_gates and fu >= min_us
@@ -148,8 +152,11 @@ def main() -> int:
                     help="gated relative regression, 0.25 = +25%%")
     ap.add_argument("--gate", default="kernel,serve",
                     help="comma list of tables whose us_per_call gates")
-    ap.add_argument("--gate-row", default="kernel:/mvm,serve:/us_per",
-                    help="comma list of table:substring row filters; a "
+    ap.add_argument("--gate-row",
+                    default="kernel:/mvm|paged_attn/decode,"
+                            "serve:/us_per",
+                    help="comma list of table:substring row filters "
+                         "(| separates alternative substrings); a "
                          "bare substring applies to every gated table "
                          "(empty = every row of a gated table)")
     ap.add_argument("--min-us", type=float, default=50.0,

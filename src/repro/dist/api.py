@@ -134,3 +134,25 @@ def shard(x: Any, name: str, *, fallback: str | None = None) -> Any:
             return x
         fitted = P(*([None] * len(x.shape)))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))
+
+
+def replicated(x: Any) -> Any:
+    """Pin ``x`` fully replicated on the active rules mesh (identity
+    without one, like ``shard``).
+
+    Pallas-call boundaries use this: the interpret-mode grid loop
+    lowers to while/dynamic-slice HLO whose layouts GSPMD must guess,
+    and a guessed split triggers the involuntary-full-rematerialization
+    transition described in :func:`shard` — observed to compile to
+    WRONG numerics on the CPU SPMD backend. Replicated operands keep
+    the whole loop replicated; for the paged-attention kernel that is
+    also the natural layout, since any decode slot may address any
+    page of the pool."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    mesh = rules.mesh
+    if mesh is None or math.prod(mesh.shape.values()) <= 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * len(x.shape)))))

@@ -4,10 +4,12 @@
 #
 # CSB-RNN's hot spot IS a custom kernel (the CSB-Engine): csb_mvm.py
 # holds the Pallas TPU kernel, ops.py the padded public wrapper,
-# csb_sharded.py the mesh-sharded entry point, ref.py the jnp oracle.
+# csb_sharded.py the mesh-sharded entry point, ref.py the jnp oracle,
+# paged_attn.py the paged-attention decode kernel the serve path uses.
 from .csb_mvm import csb_mvm_pallas, default_interpret
 from .csb_sharded import csb_matvec_sharded
 from .ops import csb_matvec
+from .paged_attn import paged_attn_decode
 
 __all__ = ["csb_matvec", "csb_matvec_sharded", "csb_mvm_pallas",
-           "default_interpret"]
+           "default_interpret", "paged_attn_decode"]

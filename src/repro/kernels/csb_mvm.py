@@ -21,8 +21,9 @@ Workload balance across grid cells is the *scheduler's* job
 (engine/schedule.py); this kernel executes whatever block layout it is
 handed, masking pad lanes so padded FLOPs never corrupt results.
 
-Grid: ``(batch_tiles, Br, Bc/G)`` — the last axis accumulates into the
-output tile (minor-most, so the compiler keeps the accumulator resident).
+Grid: ``(batch_tiles, Br, Bc/G)`` — the last axis accumulates into a
+VMEM scratch tile (minor-most, so the accumulator stays resident) and
+stores the output block once, on the final column step.
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ import os
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.csb_format import PaddedCSB
 
@@ -54,12 +56,13 @@ def force_tpu_interpret_requested() -> bool:
 
 
 def default_interpret() -> bool:
-    """Interpret-mode default by backend: TPU compiles the real kernel;
-    everything else interprets. CPU (CI, the container) has no Mosaic
-    target. GPU must stay interpreted too: the kernel accumulates into
-    o_ref across grid axis 2 (pl.when(jc==0) init + read-modify-write),
-    which is only safe under TPU's sequential-grid semantics — Pallas
-    on GPU runs grid programs in parallel and would race on o_ref.
+    """Interpret-mode default by backend: real accelerators (TPU, GPU)
+    compile the kernel; CPU (CI, the container) has no Mosaic/Triton
+    target and interprets. The block-column reduction accumulates in a
+    kernel *scratch* buffer and stores ``o_ref`` exactly once per output
+    tile (no cross-step read-modify-write on the output ref), so the
+    kernel no longer depends on TPU's sequential-grid revisit semantics
+    and GPU no longer has to stay interpreted.
 
     Under REPRO_FORCE_TPU_INTERPRET the TPU branch (interpret=False) is
     taken on CPU too, relying on ``force_tpu_interpret_mode`` to emulate
@@ -68,21 +71,27 @@ def default_interpret() -> bool:
     than fail to lower."""
     if force_tpu_interpret_requested() and _tpu_interpret_available():
         return False
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def _kernel(x_ref, vals_ref, ridx_ref, cidx_ref, m_ref, n_ref, o_ref,
-            *, bm: int, bn: int, group: int):
-    """One grid step: TB batch rows x one block-row x G blocks."""
+            acc_ref, *, bm: int, bn: int, group: int):
+    """One grid step: TB batch rows x one block-row x G blocks.
+
+    The block-column reduction (grid axis 2) accumulates into the VMEM
+    scratch ``acc_ref`` — persistent across grid steps that revisit the
+    same output tile — and ``o_ref`` is stored exactly once, on the
+    final column step. The output ref is never read, so the kernel does
+    not rely on sequential-grid read-modify-write semantics."""
     jc = pl.program_id(2)
 
     @pl.when(jc == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     pm = vals_ref.shape[-2]
     pn = vals_ref.shape[-1]
-    acc = o_ref[...]
+    acc = acc_ref[...]
     for g in range(group):
         # ---- gather input neurons by ColIdx (one-hot matmul on MXU) ----
         xs = x_ref[:, g * bn:(g + 1) * bn].astype(jnp.float32)   # (TB, bn)
@@ -116,7 +125,11 @@ def _kernel(x_ref, vals_ref, ridx_ref, cidx_ref, m_ref, n_ref, o_ref,
         acc = acc + jax.lax.dot_general(
             yk, roh, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)                  # (TB, bm)
-    o_ref[...] = acc
+    acc_ref[...] = acc
+
+    @pl.when(jc == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
 
 
 @functools.partial(
@@ -172,6 +185,7 @@ def csb_mvm_pallas(
         ],
         out_specs=pl.BlockSpec((batch_tile, bm), lambda t, i, j: (t, i)),
         out_shape=jax.ShapeDtypeStruct((b, br * bm), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((batch_tile, bm), jnp.float32)],
         interpret=interpret,
     )(x, vals4, ridx3, cidx3, m2, n2)
     return out

@@ -21,7 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.dist.api import shard
+from repro.dist.api import replicated, shard
 from .config import ModelConfig
 
 PyTree = Any
@@ -341,14 +341,33 @@ def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     return g.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
 
 
-def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
+                      use_kernel: bool = False):
     """One-token decode through the paged KV pool. cache:
-    {k: (N, P, KV, D), v: ...}; ``page_table``: (B, max_pages) int32."""
+    {k: (N, P, KV, D), v: ...}; ``page_table``: (B, max_pages) int32.
+
+    ``use_kernel=True`` routes the attention through the Pallas
+    paged-attention kernel (``kernels.paged_attn``), which walks the
+    page table in-kernel instead of materializing the (B, max_pages*P)
+    gather; tokens match the gather path."""
     b, s, _ = x.shape  # s == 1
     qpos, row_pos = _decode_pos(pos, s)
     q, k, v = attn_qkv(p, x, cfg, qpos)
     ck = paged_write(cache["k"], k, pos, page_table)
     cv = paged_write(cache["v"], v, pos, page_table)
+    if use_kernel:
+        from repro.kernels.paged_attn import paged_attn_decode
+        # replicated(...): the kernel's grid loop must stay off GSPMD's
+        # guessed layouts (see dist.api.replicated) — pools are small
+        # relative to the contiguous cache they replace, and every slot
+        # may address every page anyway
+        o = paged_attn_decode(replicated(q[:, 0]), replicated(ck),
+                              replicated(cv), replicated(page_table),
+                              replicated(row_pos),
+                              scale=1.0 / math.sqrt(cfg.hd),
+                              window=cfg.window)
+        o = replicated(o).reshape(b, s, -1).astype(x.dtype)
+        return dense(o, p["wo"]), {"k": ck, "v": cv}
     kg = paged_gather(ck, page_table)          # (B, T, KV, D)
     vg = paged_gather(cv, page_table)
     t = kg.shape[1]
@@ -472,15 +491,39 @@ def mla_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
     }
 
 
-def mla_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+def mla_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
+                     use_kernel: bool = False):
     """MLA decode through paged compressed-KV pools. cache:
-    {c_kv: (N, P, kvl), k_rope: (N, P, rd)}."""
+    {c_kv: (N, P, kvl), k_rope: (N, P, rd)}.
+
+    ``use_kernel=True`` runs the absorbed-q attention through the Pallas
+    paged-attention kernel: one KV group, the compressed latent as both
+    key and value, and the rope term as the kernel's second score dot —
+    no (B, max_pages*P) gather materialization."""
     b, s, _ = x.shape
     hd, nh, rd = cfg.hd, cfg.n_heads, cfg.rope_head_dim
     qpos, row_pos = _decode_pos(pos, s)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, qpos)
     cc_pool = paged_write(cache["c_kv"], c_kv, pos, page_table)
     cr_pool = paged_write(cache["k_rope"], k_rope[:, :, 0], pos, page_table)
+    if use_kernel:
+        from repro.kernels.paged_attn import paged_attn_decode
+        wkb = p["wk_b"].reshape(cfg.kv_lora, nh, hd)
+        q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(wkb.dtype), wkb,
+                         preferred_element_type=F32)
+        cc_r = replicated(cc_pool[:, :, None, :])
+        o_c = paged_attn_decode(
+            replicated(q_c[:, 0]), cc_r, cc_r,
+            replicated(page_table), replicated(row_pos),
+            scale=1.0 / math.sqrt(hd + rd),
+            q2=replicated(q_rope[:, 0]),
+            k2_pool=replicated(cr_pool[:, :, None, :]))
+        o_c = replicated(o_c)
+        wvb = p["wv_b"].reshape(cfg.kv_lora, nh, hd)
+        o = jnp.einsum("bqhl,lhd->bqhd", o_c[:, None].astype(wvb.dtype),
+                       wvb, preferred_element_type=F32)
+        o = o.reshape(b, s, -1).astype(x.dtype)
+        return dense(o, p["wo"]), {"c_kv": cc_pool, "k_rope": cr_pool}
     cc = paged_gather(cc_pool, page_table)     # (B, T, kvl)
     cr = paged_gather(cr_pool, page_table)     # (B, T, rd)
     t = cc.shape[1]
@@ -847,11 +890,12 @@ def hybrid_decode(p, x, cfg: ModelConfig, cache, pos):
     return y, {"attn": attn_cache, "ssd": {"conv": conv, "ssm": ssm}}
 
 
-def hybrid_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table):
+def hybrid_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
+                        use_kernel: bool = False):
     """Hybrid decode: the attention KV goes through the paged pool, the
     SSM/conv state (no time dim — nothing to page) stays per-slot."""
     ya, attn_cache = attn_decode_paged(p["attn"], x, cfg, cache["attn"],
-                                       pos, page_table)
+                                       pos, page_table, use_kernel)
     ys, conv, ssm = ssd_block_apply(
         p["ssd"], x, cfg, conv_state=cache["ssd"]["conv"],
         ssm_state=cache["ssd"]["ssm"], decode=True)

@@ -363,17 +363,19 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
     return logits, new_cache
 
 
-def layer_decode_paged(lp, x, cache_l, pos, page_table, cfg: ModelConfig):
+def layer_decode_paged(lp, x, cache_l, pos, page_table, cfg: ModelConfig,
+                       use_kernel: bool = False):
     """``layer_decode`` with time-keyed cache leaves routed through the
     paged pool (``serve.paging``); state leaves (SSM/conv) stay
-    per-slot."""
+    per-slot. ``use_kernel`` selects the Pallas paged-attention kernel
+    over the XLA ``paged_gather`` fallback (tokens match)."""
     h = L.rmsnorm(x, lp["norm1"])
     if cfg.mixer == "attn":
         mix, nc = L.attn_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
-                                      page_table)
+                                      page_table, use_kernel)
     elif cfg.mixer == "mla":
         mix, nc = L.mla_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
-                                     page_table)
+                                     page_table, use_kernel)
     elif cfg.mixer == "ssd":
         # pure-state cache: nothing to page, identical to layer_decode
         mix, conv, ssm = L.ssd_block_apply(
@@ -382,7 +384,7 @@ def layer_decode_paged(lp, x, cache_l, pos, page_table, cfg: ModelConfig):
         nc = {"conv": conv, "ssm": ssm}
     elif cfg.mixer == "hybrid":
         mix, nc = L.hybrid_decode_paged(lp["mixer"], h, cfg, cache_l, pos,
-                                        page_table)
+                                        page_table, use_kernel)
     else:  # pragma: no cover
         raise ValueError(cfg.mixer)
     x = x + mix
@@ -395,7 +397,7 @@ def layer_decode_paged(lp, x, cache_l, pos, page_table, cfg: ModelConfig):
 
 
 def decode_step_paged(params, cache, tokens, pos, page_table,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, use_kernel: bool = False):
     """One decode token over the slot batch through the paged cache.
 
     Same contract as :func:`decode_step` (scalar or (B,) ``pos``), but
@@ -404,13 +406,16 @@ def decode_step_paged(params, cache, tokens, pos, page_table,
     dense int32 map ``serve.paging.PagePool.device_table`` maintains.
     The table is identical for every layer, so it rides into the layer
     scan as a closure constant rather than a scanned input.
+    ``use_kernel=True`` swaps the per-layer ``paged_gather`` attention
+    for the Pallas paged-attention kernel (``kernels.paged_attn``).
     """
     x = embed_tokens(params, tokens, cfg)
 
     def body(carry, inp):
         lp, cl = inp
         cl = jax.lax.optimization_barrier(cl)   # see decode_step
-        x_new, nc = layer_decode_paged(lp, carry, cl, pos, page_table, cfg)
+        x_new, nc = layer_decode_paged(lp, carry, cl, pos, page_table,
+                                       cfg, use_kernel)
         return x_new, nc
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))

@@ -220,12 +220,15 @@ class _Runner:
         with use_rules(self.rules):
             return fn(self.params, cache, tokens, pos)
 
-    def step_paged(self, cache, tokens, pos, page_table):
-        fn = self._steps.get(("paged", jnp.ndim(pos)))
+    def step_paged(self, cache, tokens, pos, page_table,
+                   use_kernel: bool = False):
+        key = ("paged", jnp.ndim(pos), use_kernel)
+        fn = self._steps.get(key)
         if fn is None:
-            fn = jax.jit(partial(LM.decode_step_paged, cfg=self.cfg),
+            fn = jax.jit(partial(LM.decode_step_paged, cfg=self.cfg,
+                                 use_kernel=use_kernel),
                          donate_argnums=(1,))
-            self._steps[("paged", jnp.ndim(pos))] = fn
+            self._steps[key] = fn
         with use_rules(self.rules):
             return fn(self.params, cache, tokens, pos, page_table)
 
@@ -303,7 +306,8 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                      rng: jax.Array | None = None,
                      paged: bool = False, page_size: int = 16,
                      pool_pages: int | None = None,
-                     bucket_prompts: bool | None = None) -> ServeResult:
+                     bucket_prompts: bool | None = None,
+                     use_kernel: bool = False) -> ServeResult:
     """Serve ``requests`` (mixed prompt lengths, arriving over time)
     through ``n_slots`` continuously-batched decode slots.
 
@@ -323,6 +327,11 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     token budget than contiguous slots allow (pass a smaller
     ``pool_pages`` to cap the budget). Pages free mid-decode the moment
     a request finishes.
+
+    ``use_kernel=True`` (paged only) routes decode attention through the
+    Pallas paged-attention kernel — the page-table walk happens inside
+    the kernel instead of a materialized ``(B, max_pages*P)`` gather;
+    sampled tokens are unchanged.
 
     ``bucket_prompts`` (default: on when paged) right-pads each prompt
     to a pow2 **bucket** before prefill, so a trace of arbitrary
@@ -445,7 +454,8 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                 table_host = fresh
                 table_placed = runner.place_table(fresh)
             lg, cache = runner.step_paged(cache, runner.place_tokens(cur),
-                                          pos, table_placed)
+                                          pos, table_placed,
+                                          use_kernel=use_kernel)
         else:
             lg, cache = runner.step(cache, runner.place_tokens(cur), pos)
         nxt = sample(lg[:, -1], k)
@@ -493,7 +503,8 @@ def shard_cell_params(params: dict, mesh, axis_name: str = "model") -> dict:
 
 def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
                      state: PyTree | None = None, warmup: int = 2,
-                     *, mesh=None, axis_name: str = "model"):
+                     *, mesh=None, axis_name: str = "model",
+                     collect_frame_times: bool = False):
     """frames: (T, B, in_dim). Weights may be dense, PaddedCSB, or (with
     a mesh) ShardedCSB.
 
@@ -502,7 +513,15 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
     frame batch sharded over the data axes, so the per-frame latency is
     measured on the sharded mesh — the paper's faster-than-realtime
     number at multi-chip scale. Returns (outputs (T,B,H), final state,
-    us_per_frame)."""
+    us_per_frame).
+
+    ``collect_frame_times=True`` appends a 4th element: a ``(T,)``
+    numpy array of per-frame wall microseconds, each frame blocked to
+    completion before the next starts. Blocking serializes the device
+    pipeline, so the MEAN of these is pessimistic — the un-blocked
+    ``us_per_frame`` stays the throughput number; the per-frame vector
+    is for tail latency (p99) reporting, where realtime audio cares
+    about the worst frame, not the average."""
     mesh = _resolve_mesh(mesh)
     rules = current_rules()
     if mesh is not None:
@@ -539,5 +558,20 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
             outs.append(y)
         jax.block_until_ready(outs[-1])
         dt = time.perf_counter() - t0
+
+        frame_us = None
+        if collect_frame_times:
+            # separate per-frame-blocking pass so the throughput number
+            # above is untouched by the serialization
+            times = np.empty(frames.shape[0])
+            st2 = state
+            for t in range(frames.shape[0]):
+                f0 = time.perf_counter()
+                y2, st2 = step(params, st2, frames[t])
+                jax.block_until_ready((y2, st2))
+                times[t] = (time.perf_counter() - f0) * 1e6
+            frame_us = times
     us_per_frame = dt / frames.shape[0] * 1e6
+    if collect_frame_times:
+        return jnp.stack(outs), st, us_per_frame, frame_us
     return jnp.stack(outs), st, us_per_frame

@@ -113,3 +113,36 @@ def test_gate_scope_respects_table_selection(gate_tables, expect):
     fresh = _rec("serve", [("serve/paged/us_per_token", 2000.0, 50.0)])
     _, failures = diff_records(fresh, BASE, 0.25, gate_tables, 50.0)
     assert len(failures) == expect
+
+
+KBASE = _rec("kernel", [
+    ("kernel/paged_attn/decode", 800.0, "T=128"),
+    ("kernel/paged_attn/gather_oracle", 600.0, "gathered_mb=4.0"),
+    ("kernel/b32/r75/mvm", 1000.0, "pad_flop_ratio=1.2"),
+])
+
+
+def test_injected_paged_attn_regression_fails_gate():
+    """Acceptance: a 1.5x slowdown on kernel/paged_attn/decode trips the
+    default gate-row pattern (the | alternative next to /mvm); the
+    informational gather-oracle row never gates, however large."""
+    fresh = _rec("kernel", [
+        ("kernel/paged_attn/decode", 1200.0, "T=128"),        # 1.5x
+        ("kernel/paged_attn/gather_oracle", 60000.0, "huge"),  # 100x: ok
+        ("kernel/b32/r75/mvm", 1050.0, "pad_flop_ratio=1.2"),
+    ])
+    _, failures = diff_records(fresh, KBASE, 0.25, {"kernel"}, 50.0)
+    assert len(failures) == 1
+    assert "kernel/paged_attn/decode" in failures[0]
+
+
+def test_gate_row_alternatives_cover_mvm_and_paged_attn():
+    """Both | alternatives of the kernel pattern gate independently."""
+    fresh = _rec("kernel", [
+        ("kernel/paged_attn/decode", 1200.0, "T=128"),        # 1.5x
+        ("kernel/b32/r75/mvm", 1500.0, "pad_flop_ratio=1.2"),  # 1.5x
+    ])
+    _, failures = diff_records(fresh, KBASE, 0.25, {"kernel"}, 50.0)
+    assert len(failures) == 2
+    assert any("kernel/paged_attn/decode" in f for f in failures)
+    assert any("kernel/b32/r75/mvm" in f for f in failures)

@@ -1,0 +1,420 @@
+"""Pallas paged-attention decode kernel: parity with the gather path.
+
+Acceptance (ISSUE 6): ``use_kernel=True`` decode through the paged pool
+is token-for-token / numerically equal to the ``paged_gather`` fallback
+for attn, windowed attn, MLA and hybrid mixers, with scalar and (B,)
+vector positions, unsharded and on 1x8 / 2x4 host meshes — and the
+kernel path's jaxpr no longer contains the materialized
+``(B, max_pages*P)`` gather the fallback builds before every step.
+
+Also here: edge-case coverage for the paged-cache primitives
+(``paged_write`` / ``paged_gather``) — scratch-page routing for
+inactive slots, vector-pos writes straddling page boundaries,
+``max_pages=1`` pools — and a known-drift repro (xfail) for sharded
+hybrid SSD decode on the 2x4 mesh.
+"""
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.kernels import paged_attn_decode
+from repro.models import (
+    ModelConfig, decode_step_paged, init_paged_cache,
+)
+from repro.models import init_params as lm_init
+from repro.models import layers as L
+from repro.serve import (
+    PagePool, Request, ServeConfig, generate, serve_continuous,
+)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+ATTN = ModelConfig(name="tiny-pa-attn", mixer="attn", ffn="swiglu",
+                   n_layers=2, d_model=32, n_heads=4, n_kv=2, head_dim=16,
+                   d_ff=64, vocab=50, dtype="float32", logit_chunk=16,
+                   remat=False)
+WIN = dataclasses.replace(ATTN, name="tiny-pa-win", window=6)
+MLA = ModelConfig(name="tiny-pa-mla", mixer="mla", ffn="swiglu",
+                  n_layers=2, d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                  d_ff=64, vocab=50, kv_lora=16, q_lora=16,
+                  rope_head_dim=8, dtype="float32", logit_chunk=16,
+                  remat=False)
+HYB = ModelConfig(name="tiny-pa-hyb", family="hybrid", mixer="hybrid",
+                  ffn="swiglu", n_layers=2, d_model=32, n_heads=2,
+                  n_kv=2, head_dim=16, d_ff=64, vocab=50, d_state=8,
+                  ssd_headdim=16, ssd_chunk=4, ssd_expand=2, conv_k=4,
+                  dtype="float32", logit_chunk=16, remat=False)
+
+
+def _randomized(tree, seed=0):
+    """Fill floating leaves with deterministic garbage so masked-out
+    pool positions are non-trivial in both paths."""
+    return jax.tree.map(
+        lambda a: jax.random.normal(
+            jax.random.PRNGKey((a.size + seed) % 97), a.shape
+        ).astype(a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def _pool_and_cache(cfg, pos_list, psz=4, n_pages=10, max_pages=3,
+                    seed=0):
+    n_slots = len(pos_list)
+    pool = PagePool(psz, n_pages, n_slots, max_pages)
+    for s, p in enumerate(pos_list):
+        pool.reserve(s, max_pages * psz)
+        pool.ensure(s, int(p) + 1)
+    cache = _randomized(
+        init_paged_cache(cfg, n_pages, psz, n_slots, jnp.float32), seed)
+    return cache, pool.device_table()
+
+
+# ---------------------------------------------------------------------------
+# full decode-step parity: kernel vs gather, all mixers, both pos forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vec", [False, True],
+                         ids=["scalar-pos", "vector-pos"])
+@pytest.mark.parametrize("cfg", [ATTN, WIN, MLA, HYB],
+                         ids=lambda c: c.name)
+def test_decode_step_kernel_matches_gather(cfg, vec):
+    pos_list = [7, 2, 10] if vec else [7, 7, 7]
+    pos = jnp.asarray(pos_list, jnp.int32) if vec else 7
+    cache, table = _pool_and_cache(cfg, pos_list)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (3, 1), 0, cfg.vocab)
+    lg_g, c_g = decode_step_paged(params, cache, toks, pos, table, cfg)
+    lg_k, c_k = decode_step_paged(params, cache, toks, pos, table, cfg,
+                                  use_kernel=True)
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_g),
+                               rtol=2e-5, atol=2e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5), c_k, c_g)
+
+
+# ---------------------------------------------------------------------------
+# direct kernel parity on primitive edge shapes
+# ---------------------------------------------------------------------------
+
+def _ref_paged_attn(q, kp, vp, table, pos, scale, window=None,
+                    q2=None, k2p=None):
+    """The gather-path attention math (layers.attn_decode_paged body),
+    as an oracle for direct kernel calls."""
+    b, h, d = q.shape
+    kg = L.paged_gather(kp, table)
+    vg = L.paged_gather(vp, table)
+    t, kv = kg.shape[1], kg.shape[2]
+    rep = h // kv
+    qh = q.reshape(b, kv, rep, d)
+    sc = jnp.einsum("bgrd,bkgd->bgrk", qh.astype(kg.dtype), kg,
+                    preferred_element_type=jnp.float32)
+    if q2 is not None:
+        k2g = L.paged_gather(k2p, table)
+        sc = sc + jnp.einsum(
+            "bgrd,bkgd->bgrk", q2.reshape(b, kv, rep, -1).astype(
+                k2g.dtype), k2g, preferred_element_type=jnp.float32)
+    row = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kpos = jnp.arange(t)
+    mask = kpos[None, :] <= row[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > row[:, None] - window
+    sc = jnp.where(mask[:, None, None, :], sc * scale, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(vg.dtype), vg,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, -1)
+
+
+def test_kernel_vector_pos_at_page_boundaries(rng):
+    """Slots sitting at psz-1 / psz / 2*psz-1 (last offset of a page,
+    first of the next, last of the last page) must mask exactly."""
+    psz, kv, d = 4, 2, 8
+    pool_shape = (9, psz, kv, d)            # 8 pages + scratch
+    kp = jnp.asarray(rng.normal(size=pool_shape), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=pool_shape), jnp.float32)
+    table = jnp.asarray([[0, 1], [2, 3], [5, 6]], jnp.int32)
+    pos = jnp.asarray([psz - 1, psz, 2 * psz - 1], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(3, 4, d)), jnp.float32)
+    out = paged_attn_decode(q, kp, vp, table, pos,
+                            scale=1.0 / math.sqrt(d))
+    ref = _ref_paged_attn(q, kp, vp, table, pos, 1.0 / math.sqrt(d))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_max_pages_one_pool(rng):
+    """max_pages=1: the smallest legal table still walks correctly."""
+    psz, kv, d = 8, 1, 16
+    kp = jnp.asarray(rng.normal(size=(4, psz, kv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(4, psz, kv, d)), jnp.float32)
+    table = jnp.asarray([[2], [0], [3]], jnp.int32)
+    for pos in (0, jnp.asarray([3, 0, psz - 1], jnp.int32)):
+        q = jnp.asarray(rng.normal(size=(3, 2, d)), jnp.float32)
+        out = paged_attn_decode(q, kp, vp, table, pos,
+                                scale=1.0 / math.sqrt(d))
+        ref = _ref_paged_attn(q, kp, vp, table, pos, 1.0 / math.sqrt(d))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_inactive_slot_scratch_page(rng):
+    """A slot whose table row is all scratch (inactive) still produces
+    finite output — the mask kills every scratch position except
+    kpos=0..pos, which read scratch garbage identically to the gather
+    path."""
+    psz, kv, d = 4, 2, 8
+    kp = jnp.asarray(rng.normal(size=(5, psz, kv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(5, psz, kv, d)), jnp.float32)
+    scratch = 4
+    table = jnp.asarray([[0, 1], [scratch, scratch]], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(2, 4, d)), jnp.float32)
+    pos = jnp.asarray([6, 0], jnp.int32)
+    out = paged_attn_decode(q, kp, vp, table, pos,
+                            scale=1.0 / math.sqrt(d))
+    ref = _ref_paged_attn(q, kp, vp, table, pos, 1.0 / math.sqrt(d))
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged_write / paged_gather primitive edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_paged_write_vector_pos_page_boundaries():
+    psz = 4
+    pool = jnp.zeros((9, psz, 2), jnp.float32)   # 8 pages + scratch
+    table = jnp.asarray([[0, 1], [2, 3], [5, 6]], jnp.int32)
+    pos = jnp.asarray([psz - 1, psz, 2 * psz - 1], jnp.int32)
+    new = jnp.arange(1, 7, dtype=jnp.float32).reshape(3, 1, 2)
+    out = np.asarray(L.paged_write(pool, new, pos, table))
+    # (slot, phys page, offset): 3 -> (0,3); 4 -> (3,0); 7 -> (6,3)
+    np.testing.assert_array_equal(out[0, 3], [1, 2])
+    np.testing.assert_array_equal(out[3, 0], [3, 4])
+    np.testing.assert_array_equal(out[6, 3], [5, 6])
+    assert np.count_nonzero(out) == 6            # nothing else touched
+
+
+def test_paged_write_inactive_slots_hit_scratch_page():
+    """Inactive slots (table row = scratch) write into the scratch page
+    and never corrupt an allocatable page."""
+    psz, n_slots = 4, 3
+    pool = PagePool(psz, 6, n_slots, 2)
+    pool.reserve(1, 5)
+    pool.ensure(1, 1)
+    table = pool.device_table()
+    assert pool.scratch_page == 6
+    # rows 0 and 2 never reserved: all-scratch
+    np.testing.assert_array_equal(np.asarray(table)[0], [6, 6])
+    np.testing.assert_array_equal(np.asarray(table)[2], [6, 6])
+    dev = jnp.zeros((7, psz, 2), jnp.float32)
+    new = jnp.arange(1, 7, dtype=jnp.float32).reshape(3, 1, 2)
+    out = np.asarray(L.paged_write(dev, new, 0, table))
+    live = pool.slot_pages(1)[0]
+    np.testing.assert_array_equal(out[live, 0], [3, 4])
+    # every other allocatable page is untouched
+    untouched = [p for p in range(6) if p != live]
+    assert not np.count_nonzero(out[untouched])
+    # both inactive writes landed on the scratch page (either may win)
+    assert out[6, 0].tolist() in ([1, 2], [5, 6])
+
+
+def test_paged_gather_max_pages_one(rng):
+    pool = jnp.asarray(rng.normal(size=(4, 8, 3)), jnp.float32)
+    table = jnp.asarray([[2], [0], [3]], jnp.int32)
+    g = L.paged_gather(pool, table)
+    assert g.shape == (3, 8, 3)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.asarray(pool)[np.asarray(table)[:, 0]])
+
+
+def test_paged_gather_scratch_rows_masked_by_position():
+    """Scratch-page garbage gathered for inactive slots sits at logical
+    positions the kpos<=pos mask excludes — write then gather round-trips
+    only the live extent."""
+    psz = 4
+    pool = PagePool(psz, 4, 2, 2)
+    pool.reserve(0, 6)
+    pool.ensure(0, 6)
+    table = pool.device_table()
+    dev = jnp.full((5, psz, 1), 7.0, jnp.float32)   # garbage everywhere
+    for t in range(6):
+        dev = L.paged_write(dev, jnp.full((2, 1, 1), float(t)),
+                            t, table)
+    g = np.asarray(L.paged_gather(dev, table))      # (2, 8, 1)
+    np.testing.assert_array_equal(g[0, :6, 0], np.arange(6.0))
+    # slot 1 is inactive: every gathered row is the scratch page — the
+    # decode mask (pos<0 ... none attendable) is what protects it, not
+    # the gather; assert it reads the scratch page verbatim
+    np.testing.assert_array_equal(g[1, :psz], np.asarray(dev)[4])
+    np.testing.assert_array_equal(g[1, psz:], np.asarray(dev)[4])
+
+
+# ---------------------------------------------------------------------------
+# the point of the kernel: no (B, max_pages*P) gather in the jaxpr
+# ---------------------------------------------------------------------------
+
+def _collect_shapes(jaxpr, acc):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v.aval, "shape"):
+                acc.add(tuple(v.aval.shape))
+        for val in eqn.params.values():
+            for sub in jax.tree.leaves(
+                    val, is_leaf=lambda x: hasattr(x, "eqns")
+                    or hasattr(x, "jaxpr")):
+                if hasattr(sub, "jaxpr"):
+                    sub = sub.jaxpr
+                if hasattr(sub, "eqns"):
+                    _collect_shapes(sub, acc)
+    return acc
+
+
+def _decode_step_shapes(use_kernel):
+    n_slots, psz, mp = 3, 4, 6
+    pool = PagePool(psz, 8, n_slots, mp)
+    for s in range(n_slots):
+        pool.reserve(s, 8)
+        pool.ensure(s, 5)
+    cache = init_paged_cache(ATTN, 8, psz, n_slots, jnp.float32)
+    params = lm_init(jax.random.PRNGKey(0), ATTN)
+    toks = jnp.zeros((n_slots, 1), jnp.int32)
+    fn = functools.partial(decode_step_paged, cfg=ATTN,
+                           use_kernel=use_kernel)
+    closed = jax.make_jaxpr(fn)(params, cache, toks, 4,
+                                pool.device_table())
+    return _collect_shapes(closed.jaxpr, set())
+
+
+def test_kernel_path_never_materializes_the_gather():
+    """The fallback trace contains (B, max_pages*P, ...) intermediates
+    (the HBM gather); the kernel trace must not — that's the
+    memory-traffic win the bench row measures."""
+    b, t = 3, 24                               # B=3 slots, 6 pages * 4
+    gathered = {s for s in _decode_step_shapes(False)
+                if len(s) >= 2 and s[0] == b and s[1] == t}
+    assert gathered, "gather path no longer materializes — update test"
+    kernel = {s for s in _decode_step_shapes(True)
+              if len(s) >= 2 and s[0] == b and s[1] == t}
+    assert not kernel, f"kernel path still materializes {kernel}"
+
+
+# ---------------------------------------------------------------------------
+# serve-level parity: unsharded + 1x8 / 2x4 meshes
+# ---------------------------------------------------------------------------
+
+def _requests(prompts, max_new, arrivals=None):
+    arrivals = arrivals or [0] * len(prompts)
+    return [Request(rid=i, tokens=np.asarray(p), max_new_tokens=m,
+                    arrival=a)
+            for i, (p, m, a) in enumerate(zip(prompts, max_new, arrivals))]
+
+
+def _ref_tokens(params, cfg, prompt, n_new):
+    out = generate(params, cfg, jnp.asarray(prompt)[None],
+                   ServeConfig(max_new_tokens=n_new))
+    return np.asarray(out)[0, len(prompt):]
+
+
+@pytest.mark.parametrize("cfg", [ATTN, MLA, HYB], ids=lambda c: c.name)
+def test_serve_kernel_matches_generate(cfg):
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in (4, 8, 5)]
+    max_new = [4, 6, 5]
+    reqs = _requests(prompts, max_new, arrivals=[0, 0, 3])
+    res = serve_continuous(params, cfg, reqs, n_slots=2, paged=True,
+                           page_size=4, use_kernel=True)
+    assert res.stats["paged"]
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            res.tokens[i], _ref_tokens(params, cfg, p, max_new[i]),
+            err_msg=f"{cfg.name} request {i}")
+
+
+@needs8
+@pytest.mark.parametrize("shape", [(1, 8), (2, 4)],
+                         ids=["mesh1x8", "mesh2x4"])
+def test_serve_kernel_sharded_matches_unsharded(shape):
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(shape),
+                ("data", "model"))
+    params = lm_init(jax.random.PRNGKey(0), ATTN)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, ATTN.vocab, size=n) for n in (5, 9, 6)]
+    max_new = [5, 4, 6]
+    reqs = _requests(prompts, max_new, arrivals=[0, 0, 2])
+    res = serve_continuous(params, ATTN, reqs, n_slots=2, mesh=mesh,
+                           paged=True, page_size=4, use_kernel=True)
+    assert res.stats["sharded"] and res.stats["paged"]
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            res.tokens[i], _ref_tokens(params, ATTN, p, max_new[i]),
+            err_msg=f"mesh {shape} request {i}")
+
+
+@needs8
+@pytest.mark.parametrize("shape", [(1, 8), (2, 4)],
+                         ids=["mesh1x8", "mesh2x4"])
+def test_serve_kernel_sharded_mla_matches_gather_path(shape):
+    """MLA kernel vs gather fallback on the SAME mesh: token-identical.
+
+    Sharded MLA *decode itself* drifts from the unsharded trace on tiny
+    host-mesh configs (pre-existing, paging- and kernel-independent —
+    even contiguous ``generate`` with a mesh shows it), so the kernel
+    acceptance bar for MLA is fallback-relative: whatever the sharded
+    gather path produces, the kernel must reproduce. For plain attn the
+    kernel meets the *stronger* unsharded-reference bar (test above);
+    its replicated pallas boundary sidesteps the GSPMD remat hazard
+    that can flip the gather fallback's sampled ties."""
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(shape),
+                ("data", "model"))
+    params = lm_init(jax.random.PRNGKey(0), MLA)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, MLA.vocab, size=n) for n in (5, 9, 6)]
+    max_new = [5, 4, 6]
+    ker = serve_continuous(params, MLA,
+                           _requests(prompts, max_new, arrivals=[0, 0, 2]),
+                           n_slots=2, mesh=mesh, paged=True, page_size=4,
+                           use_kernel=True)
+    ref = serve_continuous(params, MLA,
+                           _requests(prompts, max_new, arrivals=[0, 0, 2]),
+                           n_slots=2, mesh=mesh, paged=True, page_size=4)
+    assert ker.stats["sharded"] and ker.stats["paged"]
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(
+            ker.tokens[i], ref.tokens[i],
+            err_msg=f"mesh {shape} request {i}")
+
+
+# ---------------------------------------------------------------------------
+# known drift: sharded hybrid SSD decode on the 2x4 mesh (repro, xfail)
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.xfail(
+    strict=False,
+    reason="sharded hybrid decode on a 2x4 mesh can drift from the "
+    "unsharded trace: the SSD state update order changes under the "
+    "data-axis batch split and f32 accumulation differences can flip "
+    "an argmax tie (tracked in ROADMAP; kernel-independent)")
+def test_hybrid_sharded_decode_drift_2x4():
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
+                ("data", "model"))
+    params = lm_init(jax.random.PRNGKey(0), HYB)
+    rng = np.random.default_rng(13)
+    prompt = jnp.asarray(rng.integers(0, 50, size=7))[None]
+    scfg = ServeConfig(max_new_tokens=12)
+    ref = np.asarray(generate(params, HYB, prompt, scfg))[0]
+    shr = np.asarray(generate(params, HYB, prompt, scfg, mesh=mesh))[0]
+    div = np.nonzero(ref != shr)[0]
+    first = int(div[0]) if div.size else -1
+    np.testing.assert_array_equal(
+        shr, ref,
+        err_msg=f"sharded hybrid decode diverges at token index {first}")

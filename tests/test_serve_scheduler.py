@@ -280,8 +280,10 @@ def test_diff_gates_serve_rows():
     from benchmarks.diff import diff_records, parse_gate_rows
 
     assert parse_gate_rows("kernel:/mvm,serve:/us_per") == \
-        {"kernel": "/mvm", "serve": "/us_per"}
-    assert parse_gate_rows("/mvm") == {"*": "/mvm"}
+        {"kernel": ("/mvm",), "serve": ("/us_per",)}
+    assert parse_gate_rows("/mvm") == {"*": ("/mvm",)}
+    assert parse_gate_rows("kernel:/mvm|paged_attn/decode") == \
+        {"kernel": ("/mvm", "paged_attn/decode")}
 
     base = _rec("serve", [
         ("serve/continuous/us_per_token", 1000.0, 100.0),
