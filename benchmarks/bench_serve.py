@@ -15,19 +15,29 @@ noise-robust min-of-N statistic:
   serve/generate/us_per_token  — the fixed-batch ``generate`` loop on
       the same model (the decode_32k shape, scaled down); derived =
       tokens/sec.
+  serve/prefix/us_per_token    — a shared-system-prompt trace through
+      the paged cache with ``prefix_cache=True`` (radix-trie admission
+      + CoW partial prefill); derived = tokens/sec. The run asserts
+      token parity with the non-shared engine, nonzero prefix hits and
+      a real prefill-token reduction before emitting, so the row can
+      never report a number the sharing didn't earn.
   serve/frames/us_per_frame    — ``rnn_serve_frames`` over a
       CSB-compressed LSTM (the paper's faster-than-realtime workload);
       derived = the realtime criterion check (<500 us is only
       meaningful on real hardware; CPU-interpret numbers gate only
       against themselves).
+  serve/frames/p99_us_per_frame — tail frame latency from a separate
+      per-frame-blocking pass (the realtime criterion cares about the
+      worst frame; blocking serializes the pipeline, so it must not
+      pollute the gated mean row). Gated by diff.py's ABSOLUTE
+      realtime budget (--realtime-budget-us, default 500us normalized)
+      rather than the relative rule: a p99 drifting within budget is
+      fine, one crossing the frame deadline is a failure.
 
 Informational rows (never gate: us_per_call = 0): achieved slot
 occupancy, the scheduler's prefill/decode-step counts, the paged
 memory footprint (peak pool tokens vs the contiguous cache the same
-trace would pin), and ``serve/frames/p99_us_per_frame`` — tail frame
-latency from a separate per-frame-blocking pass (the realtime
-criterion cares about the worst frame; blocking serializes the
-pipeline, so it must not pollute the gated mean row).
+trace would pin), and the prefix-sharing counters.
 """
 from __future__ import annotations
 
@@ -107,6 +117,39 @@ def run() -> None:
          f"contiguous={contiguous_tokens};"
          f"frag={pg['internal_fragmentation']}")
 
+    # -- prefix cache: shared-system-prompt trace --------------------------
+    sys_p = rng.integers(0, CFG.vocab, size=18)
+    preqs = []
+    for i in range(12):
+        tail = rng.integers(0, CFG.vocab, size=int(rng.integers(2, 8)))
+        preqs.append(Request(
+            rid=i, tokens=np.concatenate([sys_p, tail]),
+            max_new_tokens=int(rng.integers(6, 13)), arrival=(i // 4) * 4))
+    off = serve_continuous(params, CFG, preqs, n_slots=N_SLOTS,
+                           paged=True, page_size=8)
+    serve_continuous(params, CFG, preqs, n_slots=N_SLOTS, paged=True,
+                     page_size=8, prefix_cache=True)         # warmup
+    bestx = None
+    for _ in range(3):
+        r = serve_continuous(params, CFG, preqs, n_slots=N_SLOTS,
+                             paged=True, page_size=8, prefix_cache=True)
+        if bestx is None or r.wall_s < bestx.wall_s:
+            bestx = r
+    assert bestx.tokens == off.tokens, \
+        "prefix-cache run diverged from the non-shared engine"
+    assert bestx.stats["prefix_hits"] > 0, "trace produced no prefix hits"
+    assert bestx.stats["prefill_tokens"] < off.stats["prefill_tokens"], \
+        "prefix cache did not reduce prefill compute"
+    ntok = bestx.stats["generated_tokens"]
+    emit("serve/prefix/us_per_token", bestx.wall_s * 1e6 / ntok,
+         f"{ntok / bestx.wall_s:.1f}")
+    emit("serve/prefix/sharing", 0.0,
+         f"hits={bestx.stats['prefix_hits']};"
+         f"shared_pages={bestx.stats['shared_pages']};"
+         f"prefill_tokens={bestx.stats['prefill_tokens']}"
+         f"vs{off.stats['prefill_tokens']};"
+         f"cow={bestx.stats['paging']['cow_copies']}")
+
     # -- fixed-batch generate ----------------------------------------------
     prompts = jax.numpy.asarray(
         rng.integers(0, CFG.vocab, size=(8, 12)), dtype="int32")
@@ -147,10 +190,13 @@ def run() -> None:
             best_us, frame_us = us, ft
     emit("serve/frames/us_per_frame", best_us,
          f"realtime_500us={best_us < 500.0}")
-    # tail latency (per-frame-blocking pass): informational only —
-    # us_per_call stays 0 so the /us_per gate filter never fires on it
-    emit("serve/frames/p99_us_per_frame", 0.0,
-         f"{float(np.percentile(frame_us, 99)):.1f}")
+    # tail latency (per-frame-blocking pass). The name has no "/us_per"
+    # segment so the relative /us_per gate never fires on it; instead
+    # diff.py's --realtime-row matches the "p99" and holds the value to
+    # the absolute --realtime-budget-us frame deadline.
+    p99 = float(np.percentile(frame_us, 99))
+    emit("serve/frames/p99_us_per_frame", p99,
+         f"realtime_500us={p99 < 500.0}")
 
 
 if __name__ == "__main__":

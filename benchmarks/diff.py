@@ -86,9 +86,23 @@ def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                  min_us: float,
                  gate_row: str = "kernel:/mvm|paged_attn/decode,"
                  "serve:/us_per",
+                 *,
+                 realtime_row: str = "serve:p99",
+                 realtime_budget_us: float = 500.0,
                  ) -> tuple[list[str], list[str]]:
-    """Returns (report lines, gate failures)."""
+    """Returns (report lines, gate failures).
+
+    Rows matching ``realtime_row`` gate on an ABSOLUTE budget instead of
+    the relative regression rule: tail latency is a realtime contract
+    (a frame must render before the next arrives), so a p99 that drifts
+    2x while staying comfortably under budget is fine, and one that
+    creeps 10% over the line is not. The normalized fresh value must
+    stay <= ``realtime_budget_us``; crossing the line when the baseline
+    was under it fails outright, and when BOTH sides are over budget
+    (budget unreachable on this config) the standard both-ratios
+    regression rule takes over so the row still cannot quietly rot."""
     gate_rows = parse_gate_rows(gate_row)
+    rt_rows = parse_gate_rows(realtime_row) if realtime_row else {}
     lines: list[str] = []
     failures: list[str] = []
     for name in sorted(set(fresh) | set(base)):
@@ -132,6 +146,27 @@ def diff_records(fresh: dict[str, dict], base: dict[str, dict],
                         f"{rname}: {bu:.1f}us -> {fu:.1f}us "
                         f"({raw:.2f}x raw, {norm:.2f}x normalized, "
                         f"threshold {1 + threshold:.2f}x)")
+                rt_subs = rt_rows.get(name, rt_rows.get("*", ()))
+                if (gated and realtime_budget_us > 0 and rt_subs
+                        and any(s in rname for s in rt_subs)):
+                    fn = fu / scale
+                    if fn > realtime_budget_us and bu <= realtime_budget_us:
+                        mark = "  << OVER BUDGET"
+                        failures.append(
+                            f"{rname}: crossed the realtime budget: "
+                            f"{fn:.1f}us normalized > "
+                            f"{realtime_budget_us:.0f}us budget "
+                            f"(baseline {bu:.1f}us)")
+                    elif (fn > realtime_budget_us and not row_gates
+                          and fu >= min_us
+                          and min(raw, norm) > 1 + threshold):
+                        # both sides over budget — relative rule applies
+                        mark = "  << REGRESSION"
+                        failures.append(
+                            f"{rname}: {bu:.1f}us -> {fu:.1f}us, both "
+                            f"over the {realtime_budget_us:.0f}us budget "
+                            f"({raw:.2f}x raw, {norm:.2f}x normalized, "
+                            f"threshold {1 + threshold:.2f}x)")
                 if abs(delta) > 5 or mark:
                     lines.append(f"  {rname}: {bu:.1f} -> {fu:.1f} us "
                                  f"({raw:.2f}x raw, {delta:+.0f}% "
@@ -161,6 +196,15 @@ def main() -> int:
                          "(empty = every row of a gated table)")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="rows faster than this never gate (noise floor)")
+    ap.add_argument("--realtime-row", default="serve:p99",
+                    help="table:substring rows gated on an absolute "
+                         "normalized latency budget instead of the "
+                         "relative rule (empty disables)")
+    ap.add_argument("--realtime-budget-us", type=float,
+                    default=float(os.environ.get(
+                        "REALTIME_BUDGET_US", 500.0)),
+                    help="the budget for --realtime-row rows, in us "
+                         "(faster-than-realtime frame deadline)")
     ap.add_argument("--update-baseline", action="store_true")
     args = ap.parse_args()
 
@@ -186,7 +230,9 @@ def main() -> int:
     gate_tables = {t for t in args.gate.split(",") if t}
     lines, failures = diff_records(fresh, base, args.threshold,
                                    gate_tables, args.min_us,
-                                   gate_row=args.gate_row)
+                                   gate_row=args.gate_row,
+                                   realtime_row=args.realtime_row,
+                                   realtime_budget_us=args.realtime_budget_us)
     print("## Benchmark diff vs committed baseline")
     for ln in lines:
         print(ln)

@@ -11,6 +11,7 @@ from .lm import (
     init_paged_cache,
     init_params,
     prefill,
+    prefill_partial,
 )
 
 __all__ = [
@@ -18,4 +19,5 @@ __all__ = [
     "abstract_cache", "abstract_paged_cache", "abstract_params",
     "decode_step", "decode_step_paged", "forward_loss",
     "init_cache", "init_paged_cache", "init_params", "prefill",
+    "prefill_partial",
 ]

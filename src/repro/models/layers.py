@@ -191,6 +191,54 @@ def blockwise_attention(
     return out[:, :s]
 
 
+def context_attention(q, k, v, ctx_k, ctx_v, start, *, window=None):
+    """Suffix attention against a fixed, already-computed prefix context
+    (the prefix-cache partial prefill).
+
+    ``q``/``k``/``v`` are the suffix projections, (B, S, H|KV, D), at
+    absolute positions ``start + arange(S)``; ``ctx_k``/``ctx_v`` are
+    cached prefix KV, (B, C, KV, D), of which only positions ``< start``
+    are real (``start`` is traced — the context rides padded to a fixed
+    page-aligned width, padding masked out here).
+
+    Single-chunk mirror of :func:`blockwise_attention`'s math: the same
+    einsum forms, -1e30 masking, fp32 accumulation and l-normalization,
+    evaluated over ``concat([ctx, suffix])`` keys in ONE chunk. Because a
+    masked column contributes exactly -1e30 to the max and exactly 0.0
+    to the sums, a suffix row's output is bit-identical to what the full
+    single-chunk prefill computes for that row — the engine's
+    token-parity guarantee rests on this (and therefore on prompts
+    fitting one kv chunk; serve prompts are far below the 1024 default).
+    """
+    b, s, h, d = q.shape
+    c = ctx_k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    # replicated(...): concatenating the (replicated) cached context onto
+    # the suffix projections re-chunks the time axis, the same layout
+    # transition dist.api.shard documents as miscompiling on the CPU
+    # SPMD backend (observed as on!=off token drift on 2x4 meshes).
+    # Context widths are a handful of pages — replication is free.
+    # Scope matters: pinning q as well flips the drift onto the MLA
+    # path (both 1x8 and 2x4) — pin exactly the concat operands.
+    kk = jnp.concatenate([replicated(ctx_k).astype(k.dtype),
+                          replicated(k)], axis=1)
+    vv = jnp.concatenate([replicated(ctx_v).astype(v.dtype),
+                          replicated(v)], axis=1)
+    start = jnp.asarray(start, jnp.int32)
+    qpos = start + jnp.arange(s)
+    kpos = jnp.concatenate([jnp.arange(c), start + jnp.arange(s)])
+    valid = jnp.concatenate(
+        [jnp.arange(c) < start, jnp.ones((s,), bool)])
+    mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    o, _, l = _attend_chunk(q, kk, vv, mask, scale)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    dv = vv.shape[3]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dv)
+    return o.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA attention sublayer
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.dist.api import shard
+from repro.dist.api import replicated, shard
 from .config import ModelConfig
 from . import layers as L
 
@@ -286,10 +286,17 @@ def _prefill_layer(lp, x, cfg: ModelConfig, window, seqlen):
         nh, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
         k_nope = L.dense(c_kv, lp["mixer"]["wk_b"]).reshape(b, seqlen, nh, hd)
         v = L.dense(c_kv, lp["mixer"]["wv_b"]).reshape(b, seqlen, nh, hd)
-        qq = jnp.concatenate([q_nope, q_rope], -1)
-        kk = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_rope, (b, seqlen, nh, rd))], -1)
-        o = L.blockwise_attention(qq, kk, v, causal=True, window=window)
+        # replicated(...): unlike attn_qkv, these nope+rope concats sit
+        # AFTER _mla_qkv's layout pins, so GSPMD re-guesses their
+        # layout going into the attention scans — the transition class
+        # dist.api.shard documents as miscompiling on the CPU SPMD
+        # backend (observed: layer-0 k_rope off by O(1) on a 2x4 mesh
+        # while the same ops jitted alone are exact)
+        qq = replicated(jnp.concatenate([q_nope, q_rope], -1))
+        kk = replicated(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, seqlen, nh, rd))], -1))
+        o = L.blockwise_attention(qq, kk, replicated(v), causal=True,
+                                  window=window)
         mix = L.dense(o.reshape(b, seqlen, -1), lp["mixer"]["wo"])
         kv = {"c_kv": shard(c_kv.astype(dt), "mla_cache"),
               "k_rope": k_rope[:, :, 0].astype(dt)}
@@ -297,6 +304,113 @@ def _prefill_layer(lp, x, cfg: ModelConfig, window, seqlen):
         mix, conv, ssm = _ssd_prefill(lp["mixer"], h, cfg)
         kv = {"conv": conv, "ssm": ssm}
     else:  # pragma: no cover
+        raise ValueError(cfg.mixer)
+    x = x + mix
+    if cfg.ffn != "none":
+        h2 = L.rmsnorm(x, lp["norm2"])
+        f = (L.moe_apply(lp["ffn"], h2, cfg) if cfg.ffn == "moe"
+             else L.mlp_apply(lp["ffn"], h2, cfg))
+        x = x + f
+    return shard(x, "residual"), kv
+
+
+def prefill_partial(params, batch, ctx, cfg: ModelConfig, window=None,
+                    start=0, last_pos=None):
+    """Prefill only a prompt SUFFIX against an already-computed prefix.
+
+    The prefix-cache admission path: when a prompt's first ``start``
+    tokens match pages already in the pool, the engine gathers those
+    pages into ``ctx`` (per-layer time leaves shaped (L, 1, C, ...),
+    positions ``>= start`` being pad) and prefills just the suffix —
+    zero compute for the matched span. ``batch["tokens"]`` holds the
+    suffix, whose absolute positions are ``start + arange(S)``.
+
+    Returns logits at suffix position ``last_pos`` (default: the final
+    one) plus the SUFFIX-ONLY cache, (L, 1, S, ...) per time leaf, which
+    the engine scatters into the pool at positions ``start..start+S``
+    (``serve.scheduler.insert_paged_span``). Attention runs through
+    :func:`repro.models.layers.context_attention`, a single-chunk mirror
+    of the full-prefill math, so at serve scales the suffix KV and
+    logits are bit-identical to a from-scratch prefill of the whole
+    prompt. Only position-indexed caches support this (attn / mla);
+    SSD/hybrid state absorbs every token, so there is no suffix to skip.
+    """
+    if cfg.mixer not in ("attn", "mla"):
+        raise NotImplementedError(
+            "prefix-cache partial prefill needs a position-indexed cache "
+            f"(attn/mla), not {cfg.mixer!r}")
+    x, _ = assemble_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    fn = partial(_prefill_partial_layer, cfg=cfg, window=window, seqlen=s,
+                 start=start)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, inp):
+        lp, ctx_l = inp
+        x_new, kv = fn(lp, ctx_l, carry)
+        return x_new, kv
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], ctx))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    if last_pos is None:
+        last = hidden[:, -1]
+    else:
+        lp = jnp.asarray(last_pos, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(hidden, lp, 1, axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", last.astype(F32),
+                        head_weight(params, cfg).astype(F32))
+    if logits.shape[-1] != cfg.vocab:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    return logits, cache
+
+
+def _prefill_partial_layer(lp, ctx_l, x, cfg: ModelConfig, window, seqlen,
+                           start):
+    """``_prefill_layer`` over a suffix: queries at ``start + arange(S)``
+    attend the gathered prefix context then themselves; emits the same
+    suffix-only kv the full version emits for these positions."""
+    h = L.rmsnorm(x, lp["norm1"])
+    b = x.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    pos = start + jnp.arange(seqlen)
+    if cfg.mixer == "attn":
+        q, k, v = L.attn_qkv(lp["mixer"], h, cfg, pos)
+        o = L.context_attention(q, k, v, ctx_l["k"], ctx_l["v"], start,
+                                window=window)
+        mix = L.dense(o.reshape(b, seqlen, -1), lp["mixer"]["wo"])
+        kv = {"k": shard(k.astype(dt), "kv_cache"),
+              "v": shard(v.astype(dt), "kv_cache")}
+    elif cfg.mixer == "mla":
+        q_nope, q_rope, c_kv, k_rope = L._mla_qkv(lp["mixer"], h, cfg, pos)
+        nh, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+        k_nope = L.dense(c_kv, lp["mixer"]["wk_b"]).reshape(b, seqlen, nh, hd)
+        v = L.dense(c_kv, lp["mixer"]["wv_b"]).reshape(b, seqlen, nh, hd)
+        # replicated(...): same pin as _prefill_layer's mla branch — the
+        # post-_mla_qkv concats (and here additionally the context
+        # up-projections) otherwise hit the layout-transition miscompile
+        # dist.api.shard documents, skewing suffix KV/logits off the
+        # full-prefill reference on 2x4 meshes. The context is tiny.
+        qq = replicated(jnp.concatenate([q_nope, q_rope], -1))
+        kk = replicated(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, seqlen, nh, rd))], -1))
+        cc = replicated(ctx_l["c_kv"])
+        c = cc.shape[1]
+        ctx_k_nope = L.dense(cc, lp["mixer"]["wk_b"]).reshape(b, c, nh, hd)
+        ctx_v = replicated(
+            L.dense(cc, lp["mixer"]["wv_b"]).reshape(b, c, nh, hd))
+        ctx_kk = replicated(jnp.concatenate(
+            [ctx_k_nope,
+             jnp.broadcast_to(replicated(ctx_l["k_rope"])[:, :, None, :],
+                              (b, c, nh, rd))], -1))
+        o = L.context_attention(qq, kk, replicated(v), ctx_kk, ctx_v, start,
+                                window=window)
+        mix = L.dense(o.reshape(b, seqlen, -1), lp["mixer"]["wo"])
+        kv = {"c_kv": shard(c_kv.astype(dt), "mla_cache"),
+              "k_rope": k_rope[:, :, 0].astype(dt)}
+    else:  # pragma: no cover - guarded in prefill_partial
         raise ValueError(cfg.mixer)
     x = x + mix
     if cfg.ffn != "none":

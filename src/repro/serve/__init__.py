@@ -2,11 +2,12 @@
 
 ``engine`` owns the device loops (fixed-batch ``generate``, slot-based
 ``serve_continuous`` — contiguous or paged cache, pow2 prompt-bucketed
-prefill — and frame-by-frame ``rnn_serve_frames``), all of which run
-sharded under the ``dist`` rules when a mesh is supplied; ``scheduler``
-owns request admission and slot-granular cache reuse; ``paging`` owns
-the fixed-size token-page pool (free list + dense page table) behind
-the paged cache.
+prefill, copy-on-write prefix sharing — and frame-by-frame
+``rnn_serve_frames``), all of which run sharded under the ``dist`` rules
+when a mesh is supplied; ``scheduler`` owns request admission and
+slot/page-granular cache reuse; ``paging`` owns the fixed-size
+token-page pool (free list + dense page table + refcounted prefix trie)
+behind the paged cache. See docs/serving.md for the end-to-end tour.
 """
 from .engine import (
     ServeConfig,
@@ -17,16 +18,18 @@ from .engine import (
     serve_continuous,
     shard_cell_params,
 )
-from .paging import PagePool, pages_for
+from .paging import PagePool, SharedInfo, pages_for
 from .scheduler import (
     Request,
     SlotScheduler,
     cache_len_of,
+    copy_page_cache,
     evict_slot,
     evict_slot_state,
     fit_cache_len,
     grow_cache,
     insert_paged_cache,
+    insert_paged_span,
     insert_slot_cache,
     simulate_admission,
 )
@@ -34,8 +37,9 @@ from .scheduler import (
 __all__ = [
     "ServeConfig", "ServeResult", "bucket_len", "generate",
     "rnn_serve_frames", "serve_continuous", "shard_cell_params",
-    "PagePool", "pages_for",
-    "Request", "SlotScheduler", "cache_len_of", "evict_slot",
-    "evict_slot_state", "fit_cache_len", "grow_cache",
-    "insert_paged_cache", "insert_slot_cache", "simulate_admission",
+    "PagePool", "SharedInfo", "pages_for",
+    "Request", "SlotScheduler", "cache_len_of", "copy_page_cache",
+    "evict_slot", "evict_slot_state", "fit_cache_len", "grow_cache",
+    "insert_paged_cache", "insert_paged_span", "insert_slot_cache",
+    "simulate_admission",
 ]

@@ -52,8 +52,9 @@ from repro.models import lm as LM
 
 from .paging import PagePool, pages_for
 from .scheduler import (
-    Request, SlotScheduler, cache_len_of, evict_slot, evict_slot_state,
-    fit_cache_len, grow_cache, insert_paged_cache, insert_slot_cache,
+    _TIME_KEYS, Request, SlotScheduler, cache_len_of, copy_page_cache,
+    evict_slot, evict_slot_state, fit_cache_len, grow_cache,
+    insert_paged_cache, insert_paged_span, insert_slot_cache,
 )
 
 PyTree = Any
@@ -106,6 +107,10 @@ def _jitted(cfg: ModelConfig, rules_key):
     weights hit the same cache."""
     return {
         "prefill": jax.jit(partial(LM.prefill, cfg=cfg)),
+        # prefix-cache hits prefill only the unmatched suffix against the
+        # gathered shared pages; variants bounded by (pow2 suffix bucket)
+        # x (pow2 context page count)
+        "prefill_partial": jax.jit(partial(LM.prefill_partial, cfg=cfg)),
         # one jitted step per pos rank: scalar (fixed batch) / (B,) slots
         "steps": {},
     }
@@ -145,6 +150,7 @@ class _Runner:
             rules_key = None
         jt = _jitted(cfg, rules_key)
         self._prefill = jt["prefill"]
+        self._prefill_partial = jt["prefill_partial"]
         self._steps = jt["steps"]
         # per-shape NamedSharding cache: spec derivation is loop-
         # invariant, and place_tokens/place_pos sit on the per-token
@@ -166,6 +172,18 @@ class _Runner:
                 return self._prefill(self.params, {"tokens": tokens})
             return self._prefill(self.params, {"tokens": tokens},
                                  last_pos=jnp.asarray(last_pos, jnp.int32))
+
+    def prefill_partial(self, tokens: jax.Array, ctx: PyTree, start,
+                        last_pos):
+        """Prefill a prompt suffix against gathered shared-prefix pages
+        (``ctx`` rides replicated — same GSPMD workaround as
+        :meth:`place_slot_cache`, and it is one request's worth)."""
+        ctx = self.place_slot_cache(ctx)
+        with use_rules(self.rules):
+            return self._prefill_partial(
+                self.params, {"tokens": tokens}, ctx,
+                start=jnp.asarray(start, jnp.int32),
+                last_pos=jnp.asarray(last_pos, jnp.int32))
 
     def place_cache(self, cache: PyTree, paged: bool = False) -> PyTree:
         if self.mesh is None:
@@ -300,6 +318,25 @@ class ServeResult:
         return self.stats["tokens_per_sec"]
 
 
+def _gather_ctx(cache: PyTree, pages) -> PyTree:
+    """Pull the shared-prefix pages out of the live paged cache as a
+    contiguous per-layer context for the partial prefill. ``pages`` is a
+    host array of physical page ids (scratch-padded to a pow2 count, so
+    compiled partial-prefill variants stay O(log max_pages)); each time
+    leaf (L, N, P, ...) gathers to (L, 1, len(pages) * P, ...)."""
+    idx = jnp.asarray(pages, jnp.int32)
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        assert keys and keys[-1] in _TIME_KEYS, \
+            "prefix sharing needs an all-pool cache (attn/mla)"
+        g = leaf[:, idx]
+        return g.reshape((g.shape[0], 1, g.shape[1] * g.shape[2])
+                         + g.shape[3:])
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
 def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                      *, n_slots: int = 4, temperature: float = 0.0,
                      cache_len: int | None = None, mesh=None, policy=None,
@@ -307,6 +344,7 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                      paged: bool = False, page_size: int = 16,
                      pool_pages: int | None = None,
                      bucket_prompts: bool | None = None,
+                     prefix_cache: bool = False,
                      use_kernel: bool = False) -> ServeResult:
     """Serve ``requests`` (mixed prompt lengths, arriving over time)
     through ``n_slots`` continuously-batched decode slots.
@@ -340,17 +378,34 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     to real positions, so sampled tokens are unchanged; SSD/hybrid
     mixers scan pad tokens into their recurrent state, so bucketing
     auto-disables there.
+
+    ``prefix_cache=True`` (paged only) retains prompt pages in a
+    refcounted radix trie after their request finishes and shares them
+    across requests: an admission whose prompt prefix matches pages
+    already in the pool maps them instead of recomputing (prefill runs
+    only from the divergence point — ``models.lm.prefill_partial``), and
+    the first write into a partially-shared page goes through
+    copy-on-write. Sampled tokens are identical to ``prefix_cache=False``
+    (the partial prefill mirrors the full prefill bit-for-bit at serve
+    scales); ``stats["prefix_hits"]``/``stats["shared_pages"]`` count the
+    sharing and ``stats["prefill_tokens"]`` the prefill work actually
+    done. Auto-disables for SSD/hybrid (their recurrent state has no
+    per-position cache to share), like bucketing.
     """
     if cfg.n_codebooks:
         raise NotImplementedError(
             "serve_continuous drives single-stream token ids; codebook "
             "models go through generate()")
+    if prefix_cache and not paged:
+        raise ValueError("prefix_cache=True requires paged=True")
     bucket = bucket_prompts if bucket_prompts is not None else paged
     bucket = bucket and cfg.mixer in ("attn", "mla")
+    prefix = prefix_cache and cfg.mixer in ("attn", "mla")
     if not requests:
         stats = SlotScheduler(n_slots).stats()
         stats.update(cache_len=0, tokens_per_sec=0.0, paged=paged,
-                     bucketed_prefill=bucket,
+                     bucketed_prefill=bucket, prefix_cache=prefix,
+                     prefill_tokens=0,
                      sharded=_resolve_mesh(mesh) is not None)
         if paged:
             stats["paging"] = PagePool(
@@ -378,7 +433,8 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
         # silently fall back to the full contiguous footprint
         n_pool = (n_slots * max_pages if pool_pages is None
                   else pool_pages)
-        pool = PagePool(page_size, n_pool, n_slots, max_pages)
+        pool = PagePool(page_size, n_pool, n_slots, max_pages,
+                        prefix_cache=prefix)
     sched = SlotScheduler(n_slots, pool=pool)
     for r in requests:
         sched.submit(r)
@@ -397,36 +453,90 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     # host->device put off the gated per-token path
     table_host = table_placed = None
 
+    def _admissions():
+        # Under the prefix cache, admit one request at a time: each
+        # prompt registers right after its own prefill (below), so the
+        # NEXT admission's trie match — even in the same step — can
+        # already share it. Without the cache, one batched admit() call
+        # keeps the original page_stall accounting.
+        if not prefix:
+            yield from sched.admit()
+            return
+        while True:
+            batch = sched.admit(limit=1)
+            if not batch:
+                return
+            yield batch[0]
+
+    prefill_tokens = 0
     t0 = time.perf_counter()
     while sched.has_work():
-        for slot, req in sched.admit():
+        for slot, req in _admissions():
             rng, k = jax.random.split(rng)
             tokens = np.asarray(req.tokens)
             plen = req.prompt_len
-            if bucket:
+            info = pool.shared_info(slot) if prefix else None
+            shared = info is not None and info.shared_pages > 0
+            if shared:
+                # prefix-cache hit: gather the matched pages out of the
+                # live pool and prefill only the suffix against them
+                sstart = info.suffix_start
+                s_real = plen - sstart
+                suffix = tokens[sstart:]
+                if bucket:
+                    suffix = np.pad(
+                        suffix, [(0, bucket_len(s_real) - s_real)])
+                sp = info.shared_pages
+                n_pad = 1 << max(sp - 1, 0).bit_length()
+                ctx_row = np.concatenate([
+                    pool.slot_row(slot)[:sp],
+                    np.full(n_pad - sp, pool.scratch_page, np.int32)])
+                logits, req_cache = runner.prefill_partial(
+                    jnp.asarray(suffix)[None], _gather_ctx(cache, ctx_row),
+                    start=sstart, last_pos=s_real - 1)
+                prefill_tokens += int(suffix.shape[0])
+            elif bucket:
                 pad = bucket_len(plen) - plen
-                tokens = np.pad(tokens, [(0, pad)] + [(0, 0)] * (
+                padded = np.pad(tokens, [(0, pad)] + [(0, 0)] * (
                     tokens.ndim - 1))
                 logits, req_cache = runner.prefill(
-                    jnp.asarray(tokens)[None], last_pos=plen - 1)
+                    jnp.asarray(padded)[None], last_pos=plen - 1)
+                prefill_tokens += int(padded.shape[0])
             else:
                 logits, req_cache = runner.prefill(jnp.asarray(tokens)[None])
+                prefill_tokens += plen
             first = int(np.asarray(sample(logits, k)).reshape(-1)[0])
             if sched.started(slot, first):
                 if paged:
-                    pool.ensure(slot, plen)
-                    phys = list(pool.slot_pages(slot))
-                    # pad the page list to a pow2 count with the scratch
-                    # page so the jitted insert compiles O(log max_pages)
-                    # variants, not one per distinct prompt page count
-                    # (scratch swallows the surplus pad pages harmlessly)
-                    n_pad = 1 << max(len(phys) - 1, 0).bit_length()
-                    phys += [pool.scratch_page] * (n_pad - len(phys))
-                    req_cache = fit_cache_len(
-                        req_cache, len(phys) * page_size)
-                    cache = insert_paged_cache(
-                        cache, runner.place_slot_cache(req_cache),
-                        phys, slot)
+                    if shared:
+                        # divergence inside a shared page: give the slot
+                        # a private copy BEFORE the suffix write lands
+                        cow = pool.cow_if_needed(slot)
+                        if cow is not None:
+                            cache = copy_page_cache(cache, *cow)
+                        pool.ensure(slot, plen)
+                        cache = insert_paged_span(
+                            cache, runner.place_slot_cache(req_cache),
+                            pool.slot_row(slot), sstart, plen - sstart,
+                            slot)
+                    else:
+                        pool.ensure(slot, plen)
+                        phys = list(pool.slot_pages(slot))
+                        # pad the page list to a pow2 count with the
+                        # scratch page so the jitted insert compiles
+                        # O(log max_pages) variants, not one per distinct
+                        # prompt page count (scratch swallows the surplus
+                        # pad pages harmlessly)
+                        n_pad = 1 << max(len(phys) - 1, 0).bit_length()
+                        phys += [pool.scratch_page] * (n_pad - len(phys))
+                        req_cache = fit_cache_len(
+                            req_cache, len(phys) * page_size)
+                        cache = insert_paged_cache(
+                            cache, runner.place_slot_cache(req_cache),
+                            phys, slot)
+                    if prefix:
+                        # future admissions may now share this prompt
+                        pool.register_prefix(slot, tokens)
                 else:
                     if bucket:
                         # drop pad positions; decode overwrites each
@@ -472,6 +582,8 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     stats["cache_len"] = cache_len
     stats["paged"] = paged
     stats["bucketed_prefill"] = bucket
+    stats["prefix_cache"] = prefix
+    stats["prefill_tokens"] = prefill_tokens
     stats["tokens_per_sec"] = round(
         stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
     stats["sharded"] = runner.mesh is not None

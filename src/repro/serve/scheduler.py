@@ -178,6 +178,69 @@ def insert_paged_cache(batch_cache: PyTree, slot_cache: PyTree,
 
 
 @partial(jax.jit, donate_argnums=(0,))
+def _insert_span(batch_cache: PyTree, suffix_cache: PyTree, row, start,
+                 length, slot):
+    def one(path, b, u):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS and u.ndim >= 3:
+            # b: (L, N_pool, P, ...) pool; u: (L, 1, S_pad, ...) suffix
+            psz = b.shape[2]
+            scratch = b.shape[1] - 1
+            idx = jnp.arange(u.shape[2])
+            posv = start + idx
+            logical = jnp.clip(posv // psz, 0, row.shape[0] - 1)
+            page = jnp.where(idx < length, row[logical], scratch)
+            return b.at[:, page, posv % psz].set(u[:, 0].astype(b.dtype))
+        starts = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, u.astype(b.dtype), starts)
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache, suffix_cache)
+
+
+def insert_paged_span(batch_cache: PyTree, suffix_cache: PyTree, row,
+                      start: int, length: int, slot: int) -> PyTree:
+    """Scatter a partially-prefilled suffix cache into the paged pool.
+
+    The prefix-cache admission path: ``suffix_cache`` time leaves span
+    positions ``[start, start + length)`` of the request (start = the
+    divergence point; entries past ``length`` are bucket padding). Each
+    position lands at ``(row[pos // page_size], pos % page_size)`` —
+    token-granular, so a CoW'd divergence page keeps its shared head and
+    gains the suffix tail. Padding positions route to the pool's scratch
+    page (``row`` rides scratch-filled from ``PagePool.slot_row``, and
+    the row width pins the compiled variant count to the table width).
+    State leaves write into batch slot ``slot`` whole, as in
+    :func:`insert_slot_cache`.
+    """
+    return _insert_span(batch_cache, suffix_cache,
+                        jnp.asarray(row, jnp.int32),
+                        jnp.asarray(start, jnp.int32),
+                        jnp.asarray(length, jnp.int32),
+                        jnp.asarray(slot, jnp.int32))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_page(batch_cache: PyTree, src, dst):
+    def one(path, b):
+        keys = [getattr(k, "key", "") for k in path]
+        if keys and keys[-1] in _TIME_KEYS:
+            return b.at[:, dst].set(b[:, src])
+        return b
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache)
+
+
+def copy_page_cache(batch_cache: PyTree, src: int, dst: int) -> PyTree:
+    """Copy-on-write support: duplicate physical page ``src`` into
+    ``dst`` across every pool (time) leaf. The engine calls this with
+    the pair ``PagePool.cow_if_needed`` returns, BEFORE the first write
+    into the slot's divergence page, so the shared original keeps
+    serving its other readers untouched."""
+    return _copy_page(batch_cache, jnp.asarray(src, jnp.int32),
+                      jnp.asarray(dst, jnp.int32))
+
+
+@partial(jax.jit, donate_argnums=(0,))
 def _evict_state(batch_cache: PyTree, slot):
     def one(path, b):
         keys = [getattr(k, "key", "") for k in path]
@@ -260,6 +323,8 @@ class SlotScheduler:
         self.active_slot_steps = 0
         self.peak_active = 0
         self.page_stalls = 0          # admissions deferred for pages
+        self.prefix_hits = 0          # admissions that matched the trie
+        self.shared_pages = 0         # pages mapped shared across them
 
     # -- submission / admission --------------------------------------------
     def submit(self, req: Request) -> None:
@@ -279,7 +344,7 @@ class SlotScheduler:
         return bool(self._pending) or any(
             s is not None for s in self._slots)
 
-    def admit(self) -> list[tuple[int, Request]]:
+    def admit(self, limit: int | None = None) -> list[tuple[int, Request]]:
         """Fill free slots with arrived requests (FIFO by arrival).
         The engine must prefill each returned request and then call
         :meth:`started` with the token its prefill produced.
@@ -287,9 +352,15 @@ class SlotScheduler:
         Paged: the FIFO head must fit the pool's available pages or
         admission stops for this step (strict FIFO — no later request
         jumps a starved head, so admission order stays deterministic and
-        starvation-free; pages drain back as running requests finish)."""
+        starvation-free; pages drain back as running requests finish).
+
+        ``limit`` caps the admissions per call — the prefix-cache engine
+        admits one at a time so each prompt is registered before the
+        next admission's trie match runs (same-step sharing)."""
         out = []
         for i in range(self.n_slots):
+            if limit is not None and len(out) >= limit:
+                break
             if self._slots[i] is not None:
                 continue
             req = next((r for r in self._pending if r.arrival <= self.now),
@@ -297,12 +368,22 @@ class SlotScheduler:
             if req is None:
                 break
             total = req.prompt_len + req.max_new_tokens
-            if self.pool is not None and not self.pool.can_admit(total):
-                self.page_stalls += 1
-                break
-            self._pending.remove(req)
             if self.pool is not None:
-                self.pool.reserve(i, total)
+                if getattr(self.pool, "prefix_cache", False):
+                    toks = np.asarray(req.tokens).reshape(-1)
+                    info = self.pool.try_reserve(i, total, tokens=toks)
+                    if info is None:
+                        self.page_stalls += 1
+                        break
+                    if info.shared_pages:
+                        self.prefix_hits += 1
+                        self.shared_pages += info.shared_pages
+                else:
+                    if not self.pool.can_admit(total):
+                        self.page_stalls += 1
+                        break
+                    self.pool.reserve(i, total)
+            self._pending.remove(req)
             self._slots[i] = _Slot(rid=req.rid, pos=req.prompt_len,
                                    remaining=req.max_new_tokens)
             out.append((i, req))
@@ -386,6 +467,9 @@ class SlotScheduler:
         }
         if self.pool is not None:
             out["page_stalls"] = self.page_stalls
+            if getattr(self.pool, "prefix_cache", False):
+                out["prefix_hits"] = self.prefix_hits
+                out["shared_pages"] = self.shared_pages
             out["paging"] = self.pool.summary()
         return out
 
@@ -410,7 +494,10 @@ def simulate_admission(n_slots: int, requests: list[Request],
     while sched.has_work():
         for slot, req in sched.admit():
             if pool is not None:
+                pool.cow_if_needed(slot)
                 pool.ensure(slot, req.prompt_len)
+                pool.register_prefix(slot,
+                                     np.asarray(req.tokens).reshape(-1))
             sched.started(slot, 0)
         if not sched.active_mask().any():
             sched.idle_tick()
@@ -432,6 +519,6 @@ def simulate_admission(n_slots: int, requests: list[Request],
 __all__ = [
     "Request", "SlotScheduler", "simulate_admission",
     "cache_len_of", "fit_cache_len", "grow_cache",
-    "insert_slot_cache", "insert_paged_cache",
-    "evict_slot", "evict_slot_state",
+    "insert_slot_cache", "insert_paged_cache", "insert_paged_span",
+    "copy_page_cache", "evict_slot", "evict_slot_state",
 ]

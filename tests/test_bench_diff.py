@@ -146,3 +146,66 @@ def test_gate_row_alternatives_cover_mvm_and_paged_attn():
     assert len(failures) == 2
     assert any("kernel/paged_attn/decode" in f for f in failures)
     assert any("kernel/b32/r75/mvm" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# realtime budget gate (serve/frames p99)
+# ---------------------------------------------------------------------------
+
+P99 = "serve/frames/p99_us_per_frame"
+
+
+def _p99(us, calib=100.0):
+    return _rec("serve", [(P99, us, f"realtime_500us={us < 500}")],
+                calib=calib)
+
+
+def test_p99_within_budget_never_gates_on_ratio():
+    """A 4x p99 drift that stays under the budget is NOT a failure —
+    tail latency gates on the absolute frame deadline, not the ratio."""
+    _, failures = diff_records(_p99(400.0), _p99(100.0), 0.25,
+                               {"serve"}, 50.0)
+    assert failures == []
+
+
+def test_p99_crossing_budget_fails():
+    _, failures = diff_records(_p99(600.0), _p99(450.0), 0.25,
+                               {"serve"}, 50.0)
+    assert len(failures) == 1
+    assert "crossed the realtime budget" in failures[0]
+    # normalization applies: same 600us on a 2x-slower machine is
+    # 300us normalized — under budget, no failure
+    _, failures = diff_records(_p99(600.0, calib=200.0), _p99(450.0),
+                               0.25, {"serve"}, 50.0)
+    assert failures == []
+
+
+def test_p99_both_over_budget_falls_back_to_ratio_rule():
+    """Budget unreachable on this config: only a genuine >threshold
+    regression fails (same both-ratios rule as relative rows)."""
+    _, failures = diff_records(_p99(900.0), _p99(800.0), 0.25,
+                               {"serve"}, 50.0)
+    assert failures == []                       # 1.13x, within threshold
+    _, failures = diff_records(_p99(1300.0), _p99(800.0), 0.25,
+                               {"serve"}, 50.0)
+    assert len(failures) == 1 and "over the 500us budget" in failures[0]
+
+
+def test_p99_budget_configurable_and_disableable():
+    _, failures = diff_records(_p99(600.0), _p99(450.0), 0.25,
+                               {"serve"}, 50.0,
+                               realtime_budget_us=1000.0)
+    assert failures == []
+    _, failures = diff_records(_p99(600.0), _p99(450.0), 0.25,
+                               {"serve"}, 50.0, realtime_row="")
+    assert failures == []
+
+
+def test_injected_prefix_regression_fails_gate():
+    """Acceptance: the new serve/prefix/us_per_token row auto-matches
+    the serve:/us_per pattern — an injected 1.5x regression trips it."""
+    base = _rec("serve", [("serve/prefix/us_per_token", 1000.0, 100.0)])
+    fresh = _rec("serve", [("serve/prefix/us_per_token", 1500.0, 66.0)])
+    _, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
+    assert len(failures) == 1
+    assert "serve/prefix/us_per_token" in failures[0]

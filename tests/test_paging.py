@@ -9,6 +9,19 @@ per-step ensure -> advance -> release-in-finish) over hundreds of
 random arrival/finish traces, running the oracle plus occupancy
 reconciliation after every event.
 
+A second sweep drives the same protocol with ``prefix_cache=True``:
+requests are generated with deliberate shared prefixes (plus a small
+vocab so accidental sharing happens too), admissions go one-at-a-time
+through ``try_reserve -> cow_if_needed -> ensure -> register_prefix``
+exactly as the prefix engine does, and requests keep decoding while
+later arrivals share (and CoW off of) their prompt pages. Sharing
+breaks the trie-less reconciliation identities — ``available()`` no
+longer equals ``n_pages - reserved_total()`` and mapped table entries
+stop being globally unique — so the prefix traces reconcile through
+``check()``'s refcount-conservation/aliasing oracle instead, and drain
+the trie with ``drop_prefix_cache()`` before the terminal free-list
+asserts.
+
 Shrunk failure cases found while developing the allocator are committed
 at the bottom as plain regression tests, so they keep running even if
 the random sweep changes shape.
@@ -101,6 +114,132 @@ def run_trace(rng: np.random.Generator, n_slots: int, page_size: int,
     return sched.stats()
 
 
+# ---------------------------------------------------------------------------
+# prefix-cache trace driver (sharing-aware reconciliation)
+# ---------------------------------------------------------------------------
+
+def _reconcile_prefix(pool: PagePool) -> None:
+    """Sharing-aware reconciliation. With a trie attached, pages may be
+    mapped by several slots at once and ``available()`` folds in
+    reclaimable trie pages, so the trie-less identities of
+    :func:`_reconcile` do not hold — refcount conservation, aliasing-
+    only-via-trie and write isolation all live inside ``check()``."""
+    pool.check()
+    assert pool.allocated_total() == pool.n_pages - len(pool._free)
+    assert 0 <= pool.reserved_total() <= pool.n_slots * pool.max_pages
+    # outstanding <= free + evictable (checked inside check()) bounds this
+    assert 0 <= pool.available() <= pool.n_pages
+    table = np.asarray(pool.device_table())
+    assert table.shape == (pool.n_slots, pool.max_pages)
+    assert ((table >= 0) & (table <= pool.scratch_page)).all()
+
+
+def _prefix_reqs(rng: np.random.Generator, n_reqs: int, cap_tokens: int
+                 ) -> list[Request]:
+    """Shared-prefix request mix: most requests reuse a random-length
+    prefix of an earlier prompt (divergence lands mid-page as often as
+    on a boundary) and append a fresh tail; the rest are fresh. Tokens
+    come from a tiny vocab so *accidental* prefix collisions happen on
+    top of the deliberate ones."""
+    bases: list[np.ndarray] = []
+    reqs = []
+    for i in range(n_reqs):
+        total = int(rng.integers(2, cap_tokens + 1))
+        plen = int(rng.integers(1, total))
+        if bases and rng.random() < 0.7:
+            base = bases[int(rng.integers(len(bases)))]
+            keep = int(rng.integers(1, min(plen, len(base)) + 1))
+            toks = np.concatenate([
+                base[:keep],
+                rng.integers(0, 7, size=plen - keep)]).astype(np.int32)
+        else:
+            toks = rng.integers(0, 7, size=plen).astype(np.int32)
+        if len(bases) < 4 or rng.random() < 0.3:
+            bases.append(toks)
+        reqs.append(Request(rid=i, tokens=toks,
+                            max_new_tokens=total - plen,
+                            arrival=int(rng.integers(0, 3 * n_reqs))))
+    return reqs
+
+
+def run_prefix_trace(rng: np.random.Generator, n_slots: int,
+                     page_size: int, n_pages: int, max_pages: int,
+                     n_reqs: int) -> dict:
+    """The engine's prefix-cache admission protocol over a random trace:
+    one-at-a-time admission (so a prompt registered this step is
+    matchable by the very next admission), ``cow_if_needed`` before the
+    first write past the shared span, ``register_prefix`` after the
+    prompt is fully ensured, decode growth + release as usual."""
+    if min(n_pages, max_pages) * page_size < 2:
+        page_size = 2       # smallest request (1 prompt + 1 new) must fit
+    pool = PagePool(page_size, n_pages, n_slots, max_pages,
+                    prefix_cache=True)
+    sched = SlotScheduler(n_slots, pool=pool)
+    cap_tokens = min(n_pages, max_pages) * page_size
+    reqs = _prefix_reqs(rng, n_reqs, cap_tokens)
+    for r in reqs:
+        sched.submit(r)
+    _reconcile_prefix(pool)
+
+    guard = sum(r.max_new_tokens + r.arrival for r in reqs) \
+        + 10 * n_reqs + 10
+    while sched.has_work():
+        while True:
+            batch = sched.admit(limit=1)
+            if not batch:
+                break
+            [(slot, req)] = batch
+            info = pool.shared_info(slot)
+            assert info is not None      # try_reserve path always records
+            # at least one suffix token is always left to prefill, and
+            # CoW is needed exactly when the suffix starts inside the
+            # shared span
+            assert info.suffix_start < req.prompt_len
+            assert info.needs_cow == (
+                info.shared_pages > 0
+                and info.suffix_start < info.shared_pages * page_size)
+            pair = pool.cow_if_needed(slot)
+            assert (pair is not None) == info.needs_cow
+            if pair is not None:
+                src, dst = pair
+                assert src != dst and 0 <= dst < pool.n_pages
+            _reconcile_prefix(pool)
+            pool.ensure(slot, req.prompt_len)
+            pool.register_prefix(slot, np.asarray(req.tokens).reshape(-1))
+            _reconcile_prefix(pool)
+            sched.started(slot, int(rng.integers(0, 100)))
+            _reconcile_prefix(pool)
+        active = sched.active_mask()
+        if not active.any():
+            sched.idle_tick()
+            guard -= 1
+            assert guard > 0, "prefix trace did not terminate (idle)"
+            continue
+        pos = sched.positions()
+        for i in np.flatnonzero(active):
+            pool.ensure(int(i), int(pos[i]) + 1)
+            _reconcile_prefix(pool)
+        pool.tick()
+        sched.advance(rng.integers(0, 100, size=n_slots))
+        _reconcile_prefix(pool)
+        guard -= 1
+        assert guard > 0, "prefix trace did not terminate"
+
+    # terminal: only the trie holds pages (that is the cache working);
+    # dropping it must drain the pool completely
+    assert pool.reserved_total() == 0
+    assert pool.allocated_total() == pool.trie_pages()
+    pool.drop_prefix_cache()
+    pool.check()
+    assert pool.allocated_total() == 0, "pages leaked past the trie"
+    assert pool.trie_pages() == 0
+    assert sorted(pool._free) == list(range(n_pages))
+    assert len(sched.results) == n_reqs
+    for r in reqs:
+        assert len(sched.results[r.rid]) == r.max_new_tokens
+    return sched.stats()
+
+
 @pytest.mark.parametrize("sweep", range(N_SWEEPS))
 def test_fuzz_random_traces(sweep):
     rng = np.random.default_rng(7919 * sweep + 13)
@@ -123,6 +262,38 @@ def test_fuzz_starved_pool_stalls_but_completes():
                       max_pages=3, n_reqs=16)
     assert stats["requests"] == 16
     assert stats["paging"]["peak_pages"] <= 3
+
+
+@pytest.mark.parametrize("sweep", range(N_SWEEPS))
+def test_fuzz_prefix_traces(sweep):
+    """240 shared-prefix traces through the prefix-cache protocol, with
+    check() + sharing-aware reconciliation after every event."""
+    rng = np.random.default_rng(104729 * sweep + 29)
+    hits = 0
+    for _ in range(TRACES_PER_SWEEP):
+        n_slots = int(rng.integers(1, 6))
+        page_size = int(rng.integers(1, 9))
+        max_pages = int(rng.integers(1, 9))
+        n_pages = int(rng.integers(1, n_slots * max_pages + 2))
+        n_reqs = int(rng.integers(1, 13))
+        stats = run_prefix_trace(rng, n_slots, page_size, n_pages,
+                                 max_pages, n_reqs)
+        hits += stats["prefix_hits"]
+    # the generator builds shared prefixes on purpose — a sweep that
+    # never hits the trie means the protocol under test went dead
+    assert hits > 0
+
+
+def test_fuzz_prefix_starved_pool_recycles_trie():
+    """Prefix cache under heavy contention: the trie must surrender its
+    retained pages to reservations (LRU leaf reclaim) and every request
+    still completes with exact page conservation."""
+    rng = np.random.default_rng(424242)
+    stats = run_prefix_trace(rng, n_slots=4, page_size=2, n_pages=4,
+                             max_pages=4, n_reqs=20)
+    assert stats["requests"] == 20
+    assert stats["paging"]["peak_pages"] <= 4
+    assert stats["paging"]["trie_evictions"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -283,3 +454,139 @@ def test_regression_simulate_admission_pool_stats():
     assert stats["paging"]["internal_fragmentation"] >= 0.0
     pool.check()
     assert pool.allocated_total() == 0
+
+
+def test_regression_prefix_cow_against_live_reader():
+    """Mid-decode divergence: request B shares A's prompt pages and
+    CoWs its divergence page while A is STILL decoding through the
+    shared original — the copy must not disturb A's mapping and both
+    slots must release cleanly."""
+    pool = PagePool(4, 8, 2, 4, prefix_cache=True)
+    sched = SlotScheduler(2, pool=pool)
+    a = [1, 2, 3, 4, 5, 6, 7, 8]                    # two whole pages
+    sched.submit(Request(rid=0, tokens=np.asarray(a, np.int32),
+                         max_new_tokens=6))
+    sched.submit(Request(rid=1,
+                         tokens=np.asarray(a[:6] + [9, 9], np.int32),
+                         max_new_tokens=2, arrival=1))
+    [(s0, r0)] = sched.admit(limit=1)
+    assert pool.cow_if_needed(s0) is None           # nothing shared yet
+    pool.ensure(s0, r0.prompt_len)
+    pool.register_prefix(s0, r0.tokens)
+    sched.started(s0, 0)
+    a_pages = pool.slot_pages(s0)
+    sched.advance(np.zeros(2, np.int64))            # A decoding, B arrives
+    [(s1, r1)] = sched.admit(limit=1)
+    info = pool.shared_info(s1)
+    assert info.shared_tokens == 6 and info.needs_cow
+    src, dst = pool.cow_if_needed(s1)
+    assert src == a_pages[1] and dst not in a_pages
+    pool.ensure(s1, r1.prompt_len)
+    pool.register_prefix(s1, r1.tokens)
+    _reconcile_prefix(pool)
+    assert pool.slot_pages(s0) == a_pages           # A's view untouched
+    assert pool.slot_pages(s1)[0] == a_pages[0]     # page 0 truly shared
+    sched.started(s1, 0)
+    for _ in range(5):
+        for i in np.flatnonzero(sched.active_mask()):
+            pool.ensure(int(i), int(sched.positions()[i]) + 1)
+        sched.advance(np.zeros(2, np.int64))
+        _reconcile_prefix(pool)
+    assert len(sched.results) == 2
+    assert pool.reserved_total() == 0
+    pool.drop_prefix_cache()
+    assert pool.allocated_total() == 0
+
+
+def test_regression_prefix_identical_prompt_serial_one_slot():
+    """The same prompt resubmitted after the first request finished: the
+    trie retains its pages past release, the re-hit caps suffix_start at
+    prompt_len - 1 (one token always re-prefills) and CoWs the page that
+    token lands in."""
+    rid = 0
+
+    def run_one(pool, sched, toks, max_new):
+        nonlocal rid
+        sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=max_new))
+        rid += 1
+        [(slot, req)] = sched.admit(limit=1)
+        info = pool.shared_info(slot)
+        pool.cow_if_needed(slot)
+        pool.ensure(slot, req.prompt_len)
+        pool.register_prefix(slot, toks)
+        _reconcile_prefix(pool)
+        if sched.started(slot, 0):
+            while sched.active_mask().any():
+                pool.ensure(slot, int(sched.positions()[slot]) + 1)
+                sched.advance(np.zeros(1, np.int64))
+                _reconcile_prefix(pool)
+        return info
+
+    pool = PagePool(4, 8, 1, 4, prefix_cache=True)
+    sched = SlotScheduler(1, pool=pool)
+    toks = np.asarray([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+    first = run_one(pool, sched, toks, 3)
+    assert first.shared_pages == 0
+    assert pool.trie_pages() == 2                   # retained past release
+    second = run_one(pool, sched, toks, 3)
+    assert second.shared_tokens == 8                # full match
+    assert second.suffix_start == 7                 # capped at plen - 1
+    assert second.needs_cow and pool.cow_copies == 1
+    assert sched.prefix_hits == 1
+    pool.drop_prefix_cache()
+    pool.check()
+    assert pool.allocated_total() == 0
+
+
+def test_regression_prefix_cow_cost_must_not_starve_admission():
+    """Shrunk from the prefix fuzz (sweep 14): on a tight pool a partial
+    trie match can make the shared plan need MORE pages than no sharing
+    (the CoW copy costs a page while the pinned match stops being
+    evictable). try_reserve must retreat to the unshared plan instead of
+    stalling the FIFO head forever."""
+    pool = PagePool(4, 4, 1, 4, prefix_cache=True)
+    sched = SlotScheduler(1, pool=pool)
+    # seed the trie with one page, then free the slot
+    sched.submit(Request(rid=0, tokens=np.asarray([1, 2, 3, 4], np.int32),
+                         max_new_tokens=1))
+    [(slot, req)] = sched.admit(limit=1)
+    pool.ensure(slot, req.prompt_len)
+    pool.register_prefix(slot, req.tokens)
+    assert sched.started(slot, 0) is False          # done at prefill
+    assert pool.trie_pages() == 1 and len(pool._free) == 3
+    # head matches 1 token of the cached page and needs the WHOLE pool:
+    # shared plan = 1 pinned + 4 private > capacity; unshared plan = 4
+    sched.submit(Request(rid=1,
+                         tokens=np.asarray([1] + [9] * 7, np.int32),
+                         max_new_tokens=5))
+    admitted = sched.admit(limit=1)
+    assert admitted, "admission starved by an unaffordable shared plan"
+    [(slot, req)] = admitted
+    info = pool.shared_info(slot)
+    assert info.shared_pages == 0 and not info.needs_cow
+    assert pool._reserved[slot] == 4                # full unshared need
+    assert pool.cow_if_needed(slot) is None
+    pool.ensure(slot, req.prompt_len)
+    _reconcile_prefix(pool)
+    # growing to the full reservation drains the free list and reclaims
+    # the (unpinned) trie page
+    pool.ensure(slot, req.prompt_len + req.max_new_tokens)
+    _reconcile_prefix(pool)
+    assert pool.trie_evictions == 1 and pool.trie_pages() == 0
+
+
+def test_regression_simulate_admission_prefix_pool():
+    """simulate_admission drives the prefix protocol too (cow -> ensure
+    -> register) — shared-system-prompt replay must reconcile and report
+    the sharing counters."""
+    sys_p = list(range(8))
+    reqs = [Request(rid=i, tokens=np.asarray(sys_p + [10 + i], np.int32),
+                    max_new_tokens=4, arrival=i) for i in range(4)]
+    pool = PagePool(4, 16, 2, 4, prefix_cache=True)
+    stats = simulate_admission(2, reqs, pool=pool)
+    assert stats["requests"] == 4
+    assert stats["prefix_hits"] == 3                # all but the first
+    assert stats["shared_pages"] >= 6               # 2 whole pages each
+    pool.check()
+    assert pool.reserved_total() == 0
+    assert pool.allocated_total() == pool.trie_pages()

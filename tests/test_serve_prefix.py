@@ -1,0 +1,292 @@
+"""Copy-on-write prefix sharing: token parity + PagePool trie semantics.
+
+The acceptance bar mirrors test_serve_paged: ``prefix_cache=True`` must
+be token-for-token identical to the non-shared paged engine — for attn
+and MLA mixers, against the scalar-pos ``generate`` reference, unsharded
+and on 1x8 / 2x4 host meshes (mesh cases need 8 devices; CI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``). On top of
+parity, admission must actually share: nonzero ``prefix_hits``, fewer
+prefill tokens, CoW on mid-page divergence.
+
+The PagePool half unit-tests the radix-trie allocator directly:
+try_reserve accounting, token-granular partial matches, CoW remapping,
+the write-isolation guard, trie retention past release, LRU reclaim
+under pressure and drop_prefix_cache — with ``check()`` asserted after
+every mutation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.models import ModelConfig
+from repro.models import init_params as lm_init
+from repro.serve import (
+    PagePool, Request, ServeConfig, generate, pages_for, serve_continuous,
+)
+
+CFG_ATTN = ModelConfig(name="tiny-prefix", mixer="attn", ffn="swiglu",
+                       n_layers=2, d_model=32, n_heads=2, n_kv=2,
+                       head_dim=16, d_ff=64, vocab=50, dtype="float32",
+                       logit_chunk=16, remat=False)
+CFG_MLA = ModelConfig(name="tiny-prefix-mla", mixer="mla", ffn="swiglu",
+                      n_layers=2, d_model=32, n_heads=2, n_kv=2,
+                      head_dim=16, d_ff=64, vocab=50, kv_lora=16,
+                      q_lora=16, rope_head_dim=8, dtype="float32",
+                      logit_chunk=16, remat=False)
+CFGS = {"attn": CFG_ATTN, "mla": CFG_MLA}
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def params_by_mixer():
+    return {name: lm_init(jax.random.PRNGKey(0), cfg)
+            for name, cfg in CFGS.items()}
+
+
+def _shared_trace(seed=7, sys_len=9, n=6, vocab=50):
+    """n requests sharing one system prompt, staggered arrivals, random
+    short tails — sys_len=9 with page_size=4 puts divergence mid-page,
+    so the trace exercises CoW, not just whole-page hits."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, vocab, size=sys_len)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, size=int(rng.integers(1, 5)))
+        reqs.append(Request(rid=i, tokens=np.concatenate([sys_p, tail]),
+                            max_new_tokens=4, arrival=(i // 3) * 2))
+    return reqs
+
+
+def _run(params, cfg, reqs, *, prefix, mesh=None):
+    return serve_continuous(params, cfg, reqs, n_slots=2, paged=True,
+                            page_size=4, prefix_cache=prefix, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# token parity (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mixer", ["attn", "mla"])
+def test_prefix_on_matches_off_and_generate(params_by_mixer, mixer):
+    cfg, params = CFGS[mixer], params_by_mixer[mixer]
+    reqs = _shared_trace()
+    off = _run(params, cfg, reqs, prefix=False)
+    on = _run(params, cfg, reqs, prefix=True)
+    assert on.tokens == off.tokens
+    assert on.stats["prefix_cache"] and not off.stats["prefix_cache"]
+    # the scalar-pos reference: generate() decodes with a scalar position
+    for r in reqs:
+        ref = generate(params, cfg, jnp.asarray(r.tokens)[None],
+                       ServeConfig(max_new_tokens=r.max_new_tokens))
+        np.testing.assert_array_equal(
+            on.tokens[r.rid], np.asarray(ref)[0, len(r.tokens):],
+            err_msg=f"request {r.rid}")
+
+
+@pytest.mark.parametrize("mixer", ["attn", "mla"])
+def test_prefix_sharing_actually_shares(params_by_mixer, mixer):
+    cfg, params = CFGS[mixer], params_by_mixer[mixer]
+    reqs = _shared_trace()
+    off = _run(params, cfg, reqs, prefix=False)
+    on = _run(params, cfg, reqs, prefix=True)
+    # every request after the first should hit the shared system prompt
+    assert on.stats["prefix_hits"] == len(reqs) - 1
+    assert on.stats["shared_pages"] > 0
+    assert on.stats["prefill_tokens"] < off.stats["prefill_tokens"]
+    # 9-token prompt, page_size=4: divergence lands inside page 2 -> CoW
+    assert on.stats["paging"]["cow_copies"] > 0
+    assert "prefix_hits" not in off.stats
+
+
+def test_prefix_off_by_default_and_requires_paged(params_by_mixer):
+    params = params_by_mixer["attn"]
+    reqs = _shared_trace(n=2)
+    res = serve_continuous(params, CFG_ATTN, reqs, n_slots=2, paged=True,
+                           page_size=4)
+    assert not res.stats["prefix_cache"]
+    with pytest.raises(ValueError, match="prefix_cache"):
+        serve_continuous(params, CFG_ATTN, reqs, n_slots=2,
+                         prefix_cache=True)
+
+
+@needs8
+@pytest.mark.parametrize("mixer", ["attn", "mla"])
+@pytest.mark.parametrize("mesh_shape", [(1, 8), (2, 4)])
+def test_prefix_parity_sharded(params_by_mixer, mixer, mesh_shape):
+    cfg, params = CFGS[mixer], params_by_mixer[mixer]
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(mesh_shape),
+                ("data", "model"))
+    reqs = _shared_trace()
+    off = _run(params, cfg, reqs, prefix=False, mesh=mesh)
+    on = _run(params, cfg, reqs, prefix=True, mesh=mesh)
+    assert on.tokens == off.tokens
+    assert on.stats["prefix_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# PagePool: trie admission accounting
+# ---------------------------------------------------------------------------
+
+def _pool(**kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_pages", 16)
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_pages", 8)
+    kw.setdefault("prefix_cache", True)
+    return PagePool(**kw)
+
+
+def _admit(pool, slot, tokens, max_new=0):
+    """Full admission protocol for a prompt: try_reserve -> cow ->
+    ensure -> register, check()ing at each step."""
+    info = pool.try_reserve(slot, len(tokens) + max_new, tokens=tokens)
+    assert info is not None
+    pool.check()
+    cow = pool.cow_if_needed(slot)
+    assert (cow is not None) == info.needs_cow
+    pool.check()
+    pool.ensure(slot, len(tokens))
+    pool.register_prefix(slot, tokens)
+    pool.check()
+    return info
+
+
+def test_try_reserve_whole_page_hit_and_reservation():
+    pool = _pool()
+    a = list(range(12))                      # 3 full pages
+    _admit(pool, 0, a, max_new=4)
+    info = pool.try_reserve(1, 16, tokens=a)   # identical prompt + 4 new
+    # matched all 12, suffix capped at plen-1 so the last token re-runs
+    assert info.shared_tokens == 12 and info.shared_pages == 3
+    assert info.suffix_start == 11 and info.needs_cow
+    # 4 total pages - 3 shared + 1 CoW copy
+    assert pool._reserved[1] == pages_for(16, 4) - 3 + 1
+    pool.check()
+    src_dst = pool.cow_if_needed(1)
+    assert src_dst is not None
+    src, dst = src_dst
+    assert pool.slot_pages(1)[2] == dst != src
+    assert pool.slot_pages(0)[2] == src      # slot 0 keeps the original
+    pool.check()
+
+
+def test_try_reserve_partial_page_match():
+    pool = _pool()
+    a = list(range(10))                      # pages: [0..3], [4..7] (+2 loose)
+    _admit(pool, 0, a)
+    b = a[:6] + [90, 91, 92]                 # diverges inside page 2
+    info = pool.try_reserve(1, len(b), tokens=b)
+    assert info.shared_tokens == 6 and info.shared_pages == 2
+    assert info.suffix_start == 6 and info.needs_cow
+    pool.check()
+    assert pool.cow_if_needed(1) is not None
+    pool.ensure(1, len(b))
+    pool.check()
+
+
+def test_try_reserve_page_aligned_divergence_no_cow():
+    pool = _pool()
+    a = list(range(8))
+    _admit(pool, 0, a)
+    b = a[:8] + [90, 91]                     # diverges exactly on boundary
+    info = pool.try_reserve(1, len(b), tokens=b)
+    assert info.shared_pages == 2 and info.suffix_start == 8
+    assert not info.needs_cow
+    assert pool.cow_if_needed(1) is None
+    pool.ensure(1, len(b))
+    pool.check()
+
+
+def test_no_match_trivial_prefix_not_shared():
+    """A 1-token common prefix is never worth sharing (suffix_start would
+    be 0): try_reserve must fall back to a plain reservation."""
+    pool = _pool()
+    _admit(pool, 0, list(range(8)))
+    info = pool.try_reserve(1, 8, tokens=[99] * 8)
+    assert info.shared_pages == 0 and info.suffix_start == 0
+    assert pool._reserved[1] == 2
+    pool.check()
+
+
+def test_write_isolation_guard_raises_without_cow():
+    pool = _pool()
+    a = list(range(12))
+    _admit(pool, 0, a)
+    info = pool.try_reserve(1, 12, tokens=a)
+    assert info.needs_cow
+    with pytest.raises(RuntimeError, match="cow_if_needed"):
+        pool.ensure(1, 12)                   # wrote into a shared page
+    pool.cow_if_needed(1)
+    pool.ensure(1, 12)                       # fine after the copy
+    pool.check()
+
+
+def test_trie_retention_and_rehit_across_release():
+    pool = _pool()
+    a = list(range(8))
+    _admit(pool, 0, a, max_new=4)
+    pool.ensure(0, 12)                       # decode grew past the prompt
+    freed = pool.release(0)
+    pool.check()
+    # prompt pages survive in the trie; the decode-only page was freed
+    assert pool.trie_pages() == 2
+    assert len(freed) == 1 and pool.allocated_total() == 2
+    info = pool.try_reserve(1, 10, tokens=a + [90, 91])
+    assert info.shared_pages == 2            # hit after the owner is gone
+    pool.check()
+
+
+def test_lru_reclaim_under_pressure():
+    pool = _pool(n_pages=3, n_slots=2, max_pages=4)
+    _admit(pool, 0, list(range(8)))          # 2 trie pages
+    pool.release(0)
+    _admit(pool, 0, [50 + i for i in range(4)])  # 1 more, LRU = first two
+    pool.release(0)
+    assert pool.trie_pages() == 3 and not pool._free
+    # a 2-page unrelated request must evict LRU leaves, not fail
+    info = pool.try_reserve(1, 8, tokens=[90 + i for i in range(8)])
+    assert info is not None and info.shared_pages == 0
+    pool.ensure(1, 8)
+    assert pool.trie_evictions >= 2
+    pool.check()
+
+
+def test_try_reserve_atomic_on_capacity_failure():
+    pool = _pool(n_pages=4, n_slots=2, max_pages=8)
+    _admit(pool, 0, list(range(8)))          # slot 0 holds 2 of 4 pages
+    ref_before = list(pool._ref)
+    # shares 2 pages but needs 3 private (8 total) — only 2 exist
+    assert pool.try_reserve(1, 32, tokens=list(range(8))) is None
+    assert pool._ref == ref_before           # pins rolled back
+    assert pool._reserved[1] == 0 and pool._n_alloc[1] == 0
+    pool.check()
+
+
+def test_drop_prefix_cache_frees_unmapped_only():
+    pool = _pool()
+    a = list(range(8))
+    _admit(pool, 0, a)
+    _admit(pool, 1, a + [90, 91])            # shares slot 0's two pages
+    pool.release(0)
+    freed = pool.drop_prefix_cache()
+    # slot 1 still maps both shared pages -> nothing freeable yet
+    assert freed == 0 and pool.trie_pages() == 2
+    pool.release(1)
+    assert pool.drop_prefix_cache() == 2
+    assert pool.allocated_total() == 0
+    assert sorted(pool._free) == list(range(pool.n_pages))
+    pool.check()
+
+
+def test_available_reduces_for_trieless_pool():
+    pool = PagePool(page_size=4, n_pages=8, n_slots=2, max_pages=4)
+    pool.reserve(0, 12)
+    assert pool.available() == pool.n_pages - pool.reserved_total()
+    pool.ensure(0, 12)
+    assert pool.available() == pool.n_pages - pool.reserved_total()
+    pool.check()
