@@ -174,6 +174,24 @@ def partition_padded(p: PaddedCSB, n_dev: int, *,
                      pe: tuple[int, int] = (8, 8),
                      policy: str = "greedy"
                      ) -> tuple[PartitionPlan, ShardedCSB]:
-    """Plan + apply: returns the plan and the device-stacked shards."""
+    """Plan + apply: returns the plan and the device-stacked shards.
+
+    With :mod:`repro.obs` enabled, each application records the
+    per-device cycle balance (the paper's workload-imbalance metric,
+    §6.3.2) at execution time: the ``dist/csb_partition/imbalance``
+    gauge accumulates one max/mean sample per partitioned weight, and a
+    trace instant carries the full per-device cycle vector."""
     plan = plan_block_rows(block_row_cycles(p, pe=pe), n_dev, policy=policy)
+    from repro.obs import metrics as obs_metrics, trace as obs_trace
+    reg = obs_metrics.get()
+    if reg is not None:
+        reg.gauge("dist/csb_partition/imbalance").set(plan.imbalance)
+        reg.gauge("dist/csb_partition/max_device_cycles").set(
+            max(plan.device_cycles))
+    tr = obs_trace.get()
+    if tr is not None:
+        tr.instant("dist/csb_partition",
+                   args={"imbalance": round(plan.imbalance, 4),
+                         "device_cycles": list(plan.device_cycles),
+                         "policy": plan.policy})
     return plan, p.split_block_rows(plan.assignment)

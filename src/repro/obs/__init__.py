@@ -1,0 +1,37 @@
+"""repro.obs — request-lifecycle tracing + metrics for the serve stack.
+
+Two independent, process-global, **off-by-default** facilities:
+
+* :mod:`repro.obs.trace`   — ring-buffered span tracer with a Chrome
+  ``trace_event`` exporter (Perfetto / ``chrome://tracing``).
+* :mod:`repro.obs.metrics` — counters, gauge timelines and
+  exact-percentile histograms, exportable to a plain dict/JSON.
+
+The serve engine, scheduler, page pool, frame server, train loop and
+CSB partitioner are pre-instrumented; enabling either facility makes
+them emit (disabled, the instrumentation is a single global read —
+see each module's docstring). ``tools/trace_summary.py`` turns an
+exported trace into latency-breakdown tables;
+:mod:`repro.obs.summary` is its importable half.
+
+    from repro.obs import enable_all, disable_all, trace, metrics
+    enable_all()
+    ... serve / train ...
+    trace.export_chrome("trace.json")
+    print(metrics.registry().histogram("serve/req/ttft_us").summary())
+    disable_all()
+"""
+from . import metrics, summary, trace
+
+
+def enable_all(trace_capacity: int = 65536):
+    """Enable tracing AND metrics; returns (tracer, registry)."""
+    return trace.enable(trace_capacity), metrics.enable()
+
+
+def disable_all():
+    """Disable both; returns (tracer, registry) that were live."""
+    return trace.disable(), metrics.disable()
+
+
+__all__ = ["trace", "metrics", "summary", "enable_all", "disable_all"]

@@ -49,6 +49,7 @@ from repro.dist import (
 )
 from repro.models import ModelConfig
 from repro.models import lm as LM
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 from .paging import PagePool, pages_for
 from .scheduler import (
@@ -129,6 +130,12 @@ class _Runner:
 
     def __init__(self, params, cfg: ModelConfig, mesh=None, policy=None):
         self.cfg = cfg
+        # cold-call tracking: ``last_cold`` is True when the preceding
+        # prefill/step call compiled (or at least first-traced) its
+        # executable — the engine charges that call's wall time to
+        # ``compile_time_s`` instead of the steady-state throughput
+        self.last_cold = False
+        self._seen_keys: set = set()
         ambient = current_rules()
         self.mesh = _resolve_mesh(mesh)
         self.policy = policy or ShardingPolicy()
@@ -166,12 +173,40 @@ class _Runner:
                                    else NamedSharding(self.mesh, fitted))
         return self._shardings[ck]
 
+    def _call_cold(self, fn, key, call):
+        """Run ``call()`` and set :attr:`last_cold`. jax's jit cache
+        size is the exact signal (a growth means this call traced +
+        compiled); fall back to first-sight-of-shape-key when the
+        private ``_cache_size`` hook is unavailable."""
+        sizer = getattr(fn, "_cache_size", None)
+        before = None
+        if sizer is not None:
+            try:
+                before = sizer()
+            except Exception:
+                before = None
+        out = call()
+        if before is not None:
+            try:
+                self.last_cold = sizer() > before
+            except Exception:
+                self.last_cold = key not in self._seen_keys
+        else:
+            self.last_cold = key not in self._seen_keys
+        self._seen_keys.add(key)
+        return out
+
     def prefill(self, tokens: jax.Array, last_pos=None):
         with use_rules(self.rules):
             if last_pos is None:
-                return self._prefill(self.params, {"tokens": tokens})
-            return self._prefill(self.params, {"tokens": tokens},
-                                 last_pos=jnp.asarray(last_pos, jnp.int32))
+                return self._call_cold(
+                    self._prefill, ("prefill", tokens.shape),
+                    lambda: self._prefill(self.params, {"tokens": tokens}))
+            return self._call_cold(
+                self._prefill, ("prefill", tokens.shape, "lp"),
+                lambda: self._prefill(
+                    self.params, {"tokens": tokens},
+                    last_pos=jnp.asarray(last_pos, jnp.int32)))
 
     def prefill_partial(self, tokens: jax.Array, ctx: PyTree, start,
                         last_pos):
@@ -179,11 +214,15 @@ class _Runner:
         (``ctx`` rides replicated — same GSPMD workaround as
         :meth:`place_slot_cache`, and it is one request's worth)."""
         ctx = self.place_slot_cache(ctx)
+        ctx_len = cache_len_of(ctx)
         with use_rules(self.rules):
-            return self._prefill_partial(
-                self.params, {"tokens": tokens}, ctx,
-                start=jnp.asarray(start, jnp.int32),
-                last_pos=jnp.asarray(last_pos, jnp.int32))
+            return self._call_cold(
+                self._prefill_partial,
+                ("prefill_partial", tokens.shape, ctx_len),
+                lambda: self._prefill_partial(
+                    self.params, {"tokens": tokens}, ctx,
+                    start=jnp.asarray(start, jnp.int32),
+                    last_pos=jnp.asarray(last_pos, jnp.int32)))
 
     def place_cache(self, cache: PyTree, paged: bool = False) -> PyTree:
         if self.mesh is None:
@@ -236,7 +275,9 @@ class _Runner:
                          donate_argnums=(1,))
             self._steps[jnp.ndim(pos)] = fn
         with use_rules(self.rules):
-            return fn(self.params, cache, tokens, pos)
+            return self._call_cold(
+                fn, ("step", jnp.ndim(pos)),
+                lambda: fn(self.params, cache, tokens, pos))
 
     def step_paged(self, cache, tokens, pos, page_table,
                    use_kernel: bool = False):
@@ -248,7 +289,9 @@ class _Runner:
                          donate_argnums=(1,))
             self._steps[key] = fn
         with use_rules(self.rules):
-            return fn(self.params, cache, tokens, pos, page_table)
+            return self._call_cold(
+                fn, key,
+                lambda: fn(self.params, cache, tokens, pos, page_table))
 
 
 def _sampler(cfg: ModelConfig, temperature: float):
@@ -391,6 +434,21 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     sharing and ``stats["prefill_tokens"]`` the prefill work actually
     done. Auto-disables for SSD/hybrid (their recurrent state has no
     per-position cache to share), like bucketing.
+
+    Throughput accounting: ``stats["tokens_per_sec"]`` divides by the
+    FULL wall clock — including the trace+compile of every first-called
+    prefill bucket and decode-step variant — and is kept for
+    compatibility. ``stats["compile_time_s"]`` isolates that first-call
+    (compile-inclusive) time and ``stats["steady_tokens_per_sec"]`` is
+    the decode throughput over warm steps only (0.0 when every step was
+    cold), so a cold-cache run no longer under-reports the engine.
+
+    With :mod:`repro.obs` enabled the run also emits per-request
+    lifecycle spans (queue wait -> prefill -> TTFT -> decode), per-step
+    spans and pool/occupancy gauge timelines — see
+    docs/observability.md. Disabled (the default), the instrumentation
+    is a few branch-on-None checks and never touches the gated
+    per-token path.
     """
     if cfg.n_codebooks:
         raise NotImplementedError(
@@ -405,7 +463,8 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
         stats = SlotScheduler(n_slots).stats()
         stats.update(cache_len=0, tokens_per_sec=0.0, paged=paged,
                      bucketed_prefill=bucket, prefix_cache=prefix,
-                     prefill_tokens=0,
+                     prefill_tokens=0, compile_time_s=0.0,
+                     steady_tokens_per_sec=0.0,
                      sharded=_resolve_mesh(mesh) is not None)
         if paged:
             stats["paging"] = PagePool(
@@ -469,12 +528,63 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
             yield batch[0]
 
     prefill_tokens = 0
+    # observability handles, fetched once per run: ``tr``/``reg`` are
+    # None when obs is off and every emit below branches on that —
+    # the cold/steady split (compile_ns/steady_*) is ALWAYS accounted,
+    # it only costs perf_counter_ns calls around already-blocking work
+    tr = obs_trace.get()
+    reg = obs_metrics.get()
+    obs_on = tr is not None or reg is not None
+    req_clock: dict[int, dict] = {}    # rid -> lifecycle timestamps (ns)
+    compile_ns = 0
+    steady_ns = 0
+    steady_tokens = 0
+
+    def _mark_eligible():
+        # stamp the wall time each queued request first became
+        # admissible (its arrival step reached) — queue wait and TTFT
+        # are measured from here, not from engine start
+        now_ns = time.perf_counter_ns()
+        for rid in sched.arrived_pending():
+            req_clock.setdefault(rid, {})["eligible"] = now_ns
+
+    def _finish_req(rid: int, t_fin: int):
+        rc = req_clock.get(rid, {})
+        t_first = rc.get("first")
+        if t_first is None:
+            return
+        n_dec = len(sched.results.get(rid, ())) - 1
+        if tr is not None:
+            tr.complete("serve/req/decode", t_first, t_fin - t_first,
+                        track=f"req {rid}",
+                        args={"rid": rid, "decode_tokens": n_dec})
+            tr.instant("serve/req/finish", track=f"req {rid}",
+                       args={"rid": rid})
+        if reg is not None and n_dec > 0:
+            reg.histogram("serve/req/decode_per_token_us").observe(
+                (t_fin - t_first) / 1e3 / n_dec)
+
     t0 = time.perf_counter()
     while sched.has_work():
+        if obs_on:
+            _mark_eligible()
         for slot, req in _admissions():
             rng, k = jax.random.split(rng)
             tokens = np.asarray(req.tokens)
             plen = req.prompt_len
+            if obs_on:
+                t_adm = time.perf_counter_ns()
+                rc = req_clock.setdefault(req.rid, {})
+                t_el = rc.get("eligible", t_adm)
+                rc["admit"] = t_adm
+                if tr is not None:
+                    tr.complete("serve/req/queue_wait", t_el,
+                                t_adm - t_el, track=f"req {req.rid}",
+                                args={"rid": req.rid, "slot": slot})
+                if reg is not None:
+                    reg.histogram("serve/req/queue_wait_us").observe(
+                        (t_adm - t_el) / 1e3)
+            t_pf = time.perf_counter_ns()
             info = pool.shared_info(slot) if prefix else None
             shared = info is not None and info.shared_pages > 0
             if shared:
@@ -506,6 +616,27 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                 logits, req_cache = runner.prefill(jnp.asarray(tokens)[None])
                 prefill_tokens += plen
             first = int(np.asarray(sample(logits, k)).reshape(-1)[0])
+            t_ft = time.perf_counter_ns()
+            if runner.last_cold:
+                compile_ns += t_ft - t_pf
+            if obs_on:
+                rc = req_clock.setdefault(req.rid, {})
+                rc["first"] = t_ft
+                t_el = rc.get("eligible", t_pf)
+                if tr is not None:
+                    track = f"req {req.rid}"
+                    tr.complete("serve/req/prefill", t_pf, t_ft - t_pf,
+                                track=track,
+                                args={"rid": req.rid, "tokens": plen,
+                                      "shared": shared,
+                                      "cold": runner.last_cold})
+                    tr.complete("serve/req/ttft", t_el, t_ft - t_el,
+                                track=track, args={"rid": req.rid})
+                if reg is not None:
+                    reg.histogram("serve/req/prefill_us").observe(
+                        (t_ft - t_pf) / 1e3)
+                    reg.histogram("serve/req/ttft_us").observe(
+                        (t_ft - t_el) / 1e3)
             if sched.started(slot, first):
                 if paged:
                     if shared:
@@ -545,14 +676,20 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                     cache = insert_slot_cache(
                         cache, runner.place_slot_cache(req_cache), slot)
                 cur = cur.at[slot, 0].set(first)
-            # max_new_tokens == 1: finished off the prefill alone; the
-            # slot never enters the decode batch, nothing to insert
+            elif obs_on:
+                # max_new_tokens == 1: finished off the prefill alone;
+                # the slot never enters the decode batch
+                _finish_req(req.rid, time.perf_counter_ns())
+            # (nothing to insert for a prefill-only request)
         active = sched.active_mask()
         if not active.any():
             sched.idle_tick()
             continue
         rng, k = jax.random.split(rng)
         pos_host = sched.positions()
+        n_active = int(active.sum())
+        rid_by_slot = sched.slot_rids() if obs_on else None
+        t_st = time.perf_counter_ns()
         pos = runner.place_pos(jnp.asarray(pos_host))
         if paged:
             # alloc-on-grow: map the page each live slot writes this step
@@ -569,11 +706,32 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
         else:
             lg, cache = runner.step(cache, runner.place_tokens(cur), pos)
         nxt = sample(lg[:, -1], k)
-        for slot in sched.advance(np.asarray(nxt)):
+        # the host pull below blocks on the step, so the wall time
+        # around it is the true per-step latency (the engine is
+        # host-synchronous per token by construction)
+        nxt_host = np.asarray(nxt)
+        t_en = time.perf_counter_ns()
+        if runner.last_cold:
+            compile_ns += t_en - t_st
+        else:
+            steady_ns += t_en - t_st
+            steady_tokens += n_active
+        if tr is not None:
+            tr.complete("serve/decode_step", t_st, t_en - t_st,
+                        track="engine",
+                        args={"active": n_active,
+                              "cold": runner.last_cold})
+        if reg is not None:
+            reg.histogram("serve/step/wall_us").observe(
+                (t_en - t_st) / 1e3)
+            reg.gauge("serve/slots/active").set(n_active)
+        for slot in sched.advance(nxt_host):
             # pages went back to the allocator inside the scheduler;
             # per-slot SSM/conv state still needs the device-side zero
             cache = (evict_slot_state(cache, slot) if paged
                      else evict_slot(cache, slot))
+            if obs_on:
+                _finish_req(rid_by_slot[slot], time.perf_counter_ns())
         cur = nxt[:, None].astype(jnp.int32)
     jax.block_until_ready(cache)
     wall = time.perf_counter() - t0
@@ -584,8 +742,13 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
     stats["bucketed_prefill"] = bucket
     stats["prefix_cache"] = prefix
     stats["prefill_tokens"] = prefill_tokens
+    # compatibility: tokens_per_sec keeps dividing by the FULL wall
+    # clock (compile included); the honest split rides alongside
     stats["tokens_per_sec"] = round(
         stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
+    stats["compile_time_s"] = round(compile_ns / 1e9, 6)
+    stats["steady_tokens_per_sec"] = round(
+        steady_tokens / (steady_ns / 1e9), 3) if steady_ns > 0 else 0.0
     stats["sharded"] = runner.mesh is not None
     return ServeResult(sched.results, stats, wall)
 
@@ -674,14 +837,27 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
         frame_us = None
         if collect_frame_times:
             # separate per-frame-blocking pass so the throughput number
-            # above is untouched by the serialization
+            # above is untouched by the serialization; per-frame spans
+            # and the realtime histogram (serve/frames/wall_us — the
+            # distribution the 500us budget judges) come from HERE,
+            # measured times recorded after the fact so tracing adds
+            # zero overhead inside the timed region
+            tr = obs_trace.get()
+            reg = obs_metrics.get()
             times = np.empty(frames.shape[0])
             st2 = state
             for t in range(frames.shape[0]):
-                f0 = time.perf_counter()
+                f0 = time.perf_counter_ns()
                 y2, st2 = step(params, st2, frames[t])
                 jax.block_until_ready((y2, st2))
-                times[t] = (time.perf_counter() - f0) * 1e6
+                dur = time.perf_counter_ns() - f0
+                times[t] = dur / 1e3
+                if tr is not None:
+                    tr.complete("serve/frame", f0, dur, track="frames",
+                                args={"frame": t})
+                if reg is not None:
+                    reg.histogram("serve/frames/wall_us").observe(
+                        dur / 1e3)
             frame_us = times
     us_per_frame = dt / frames.shape[0] * 1e6
     if collect_frame_times:

@@ -59,6 +59,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import metrics as obs_metrics, trace as obs_trace
+
 
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold ``n_tokens`` (0 tokens still needs 0 pages)."""
@@ -282,6 +284,13 @@ class PagePool:
         self._info[slot] = info
         if sp:
             self._dirty = True
+            obs_trace.instant("serve/pool/prefix_hit",
+                              args={"slot": slot, "shared_pages": sp,
+                                    "shared_tokens": matched})
+            reg = obs_metrics.get()
+            if reg is not None:
+                reg.counter("serve/pool/prefix_hits").inc()
+                reg.counter("serve/pool/shared_pages").inc(sp)
         return info
 
     def shared_info(self, slot: int) -> SharedInfo | None:
@@ -304,6 +313,11 @@ class PagePool:
         self._unref(src)
         self.cow_copies += 1
         self._dirty = True
+        obs_trace.instant("serve/pool/cow",
+                          args={"slot": slot, "src": src, "dst": dst})
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.counter("serve/pool/cow_copies").inc()
         return (src, dst)
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
@@ -496,14 +510,25 @@ class PagePool:
 
     # -- telemetry -----------------------------------------------------------
     def tick(self) -> None:
-        """Sample occupancy/fragmentation once per decode step."""
+        """Sample occupancy/fragmentation once per decode step. With
+        :mod:`repro.obs.metrics` enabled, each sample also lands in the
+        ``serve/pool/*`` gauge timelines — occupancy over the run, not
+        just the end-of-run summary averages."""
         alloc = self.allocated_total()
         used = sum(self._tokens)
         cap = alloc * self.page_size
         self.stats.ticks += 1
         self.stats.page_steps += alloc
+        frag = (1.0 - used / cap) if cap else 0.0
         if cap:
-            self.stats.frag_weighted += 1.0 - used / cap
+            self.stats.frag_weighted += frag
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.gauge("serve/pool/pages").set(alloc)
+            reg.gauge("serve/pool/free_pages").set(len(self._free))
+            reg.gauge("serve/pool/fragmentation").set(round(frag, 4))
+            if self.prefix_cache:
+                reg.gauge("serve/pool/trie_pages").set(self.trie_pages())
 
     def fragmentation(self) -> float:
         """Instantaneous internal fragmentation: the fraction of

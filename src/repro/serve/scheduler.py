@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics, trace as obs_trace
+
 PyTree = Any
 
 # cache leaves carrying a (L, B, T, ...) time dimension at axis 2
@@ -374,6 +376,7 @@ class SlotScheduler:
                     info = self.pool.try_reserve(i, total, tokens=toks)
                     if info is None:
                         self.page_stalls += 1
+                        self._emit_stall(req)
                         break
                     if info.shared_pages:
                         self.prefix_hits += 1
@@ -381,15 +384,41 @@ class SlotScheduler:
                 else:
                     if not self.pool.can_admit(total):
                         self.page_stalls += 1
+                        self._emit_stall(req)
                         break
                     self.pool.reserve(i, total)
             self._pending.remove(req)
             self._slots[i] = _Slot(rid=req.rid, pos=req.prompt_len,
                                    remaining=req.max_new_tokens)
             out.append((i, req))
+            obs_trace.instant("serve/sched/admit",
+                              args={"rid": req.rid, "slot": i,
+                                    "step": self.now})
+            reg = obs_metrics.get()
+            if reg is not None:
+                reg.counter("serve/sched/admitted").inc()
         self.peak_active = max(self.peak_active, sum(
             s is not None for s in self._slots))
         return out
+
+    def _emit_stall(self, req: Request) -> None:
+        """Observability: an admission deferred for pages (outcome
+        timeline, not just the final page_stalls count)."""
+        obs_trace.instant("serve/sched/page_stall",
+                          args={"rid": req.rid, "step": self.now})
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.counter("serve/sched/page_stalls").inc()
+
+    def arrived_pending(self) -> list[int]:
+        """rids of queued requests whose arrival step has been reached
+        (admissible now, waiting for a slot/pages) — the set whose
+        queue-wait clock is running."""
+        return [r.rid for r in self._pending if r.arrival <= self.now]
+
+    def slot_rids(self) -> list[int | None]:
+        """Per-slot resident rid (None for free slots)."""
+        return [None if s is None else s.rid for s in self._slots]
 
     def started(self, slot: int, first_token: int) -> bool:
         """Record the prefill-sampled first token. Returns False when

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import admm_init, admm_penalty, admm_update, admm_finalize
 from repro.dist.compress import compress, compress_init, decompress
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 from repro.optim import clip_by_global_norm, get_optimizer
 from . import checkpoint as ckpt
 
@@ -199,15 +200,24 @@ def train(
         if step >= tcfg.steps:
             break
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         params, opt_state, admm_state, residual, metrics = step_fn(
             params, opt_state, admm_state, residual, batch,
             jnp.asarray(step))
         if (csb_specs is not None and tcfg.admm_every
                 and (step + 1) % tcfg.admm_every == 0):
             admm_state = admm_update(params, admm_state, csb_specs)
-        loss = float(metrics["loss"])
+        loss = float(metrics["loss"])   # blocks: the step's true wall
         dt = time.perf_counter() - t0
         timer.record(dt)
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.complete("train/step", t0_ns, int(dt * 1e9),
+                        track="train", args={"step": step, "loss": loss})
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.histogram("train/step/wall_us").observe(dt * 1e6)
+            reg.gauge("train/step/loss").set(loss)
         history.append({"step": step, "loss": loss, "dt": dt})
         if step % tcfg.log_every == 0:
             q = timer.quantiles()

@@ -403,7 +403,12 @@ def test_serve_kernel_sharded_mla_matches_gather_path(shape):
     reason="sharded hybrid decode on a 2x4 mesh can drift from the "
     "unsharded trace: the SSD state update order changes under the "
     "data-axis batch split and f32 accumulation differences can flip "
-    "an argmax tie (tracked in ROADMAP; kernel-independent)")
+    "an argmax tie (tracked in ROADMAP; kernel-independent). To see "
+    "WHERE the programs diverge, run `PYTHONPATH=src python "
+    "tools/hlo_diff.py --mixer hybrid --mesh 2x4 --stage opt`: it "
+    "lowers this exact decode step both ways and prints the op-"
+    "histogram delta (the all-reduce/collective-permute sites) plus "
+    "full normalized dumps")
 def test_hybrid_sharded_decode_drift_2x4():
     mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
                 ("data", "model"))

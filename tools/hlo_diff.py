@@ -1,0 +1,245 @@
+#!/usr/bin/env python
+"""StableHLO / optimized-HLO structural diff: sharded vs unsharded
+single decode step under ``cache_specs``.
+
+The probe the ROADMAP's "sharded hybrid decode drift" item asks for:
+``generate``/``serve`` for the hybrid (attn+SSD) mixer on a 2x4 host
+mesh can diverge from the unsharded tokens (argmax tie-flips from
+changed f32 accumulation order, not a miscompile — see
+``tests/test_paged_attn.py::test_hybrid_sharded_decode_drift_2x4``).
+This tool lowers ONE jitted decode step twice — params placed by
+``csb_shard_specs``, cache by ``cache_specs``, tokens/pos by
+``batch_specs``, exactly as the serve engine's ``_Runner`` does, and
+once with everything on one device — then diffs the two programs
+*structurally*:
+
+* an **op histogram** diff (which ops appear how often on each side:
+  the all-reduces/collective-permutes and any reassociated
+  reduce/dot chains jump out here), and
+* a normalized **line diff** of the texts with SSA ids, locations and
+  metadata stripped, so renames don't drown the real changes.
+
+Both the pre-partitioning StableHLO (sharding annotations visible) and
+the post-SPMD optimized HLO (what actually runs per device — where
+accumulation-order changes live) are dumped to ``--out``.
+
+Usage:
+  PYTHONPATH=src python tools/hlo_diff.py                  # hybrid, 2x4
+  PYTHONPATH=src python tools/hlo_diff.py --mixer mla --mesh 1x8
+  PYTHONPATH=src python tools/hlo_diff.py --stage opt --full-diff
+
+Needs 8 devices; run standalone it forces 8 virtual host devices
+itself (before importing jax).
+"""
+from __future__ import annotations
+
+import argparse
+import difflib
+import os
+import re
+import sys
+from collections import Counter
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+if "jax" not in sys.modules:
+    # honored only pre-import: the probe needs a multi-device host
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+from jax.sharding import Mesh, NamedSharding                  # noqa: E402
+
+from repro.dist import (                                      # noqa: E402
+    ShardingPolicy, activation_rules, batch_specs, cache_specs,
+    csb_shard_specs, fit_spec, use_rules,
+)
+from repro.models import ModelConfig, init_params             # noqa: E402
+from repro.models import lm as LM                             # noqa: E402
+
+# tiny configs mirroring tests/test_paged_attn.py — small enough to
+# lower in seconds, structurally identical to the failing shapes
+CONFIGS = {
+    "attn": dict(mixer="attn", n_heads=4, n_kv=2),
+    "mla": dict(mixer="mla", n_heads=2, n_kv=2, kv_lora=16, q_lora=16,
+                rope_head_dim=8),
+    "hybrid": dict(family="hybrid", mixer="hybrid", n_heads=2, n_kv=2,
+                   d_state=8, ssd_headdim=16, ssd_chunk=4, ssd_expand=2,
+                   conv_k=4),
+}
+
+
+def make_cfg(mixer: str) -> ModelConfig:
+    return ModelConfig(name=f"hlo-diff-{mixer}", ffn="swiglu", n_layers=2,
+                       d_model=32, head_dim=16, d_ff=64, vocab=50,
+                       dtype="float32", logit_chunk=16, remat=False,
+                       **CONFIGS[mixer])
+
+
+# SSA ids, MLIR locations, HLO metadata/names — renaming noise the
+# structural diff must not see
+_NOISE = (
+    (re.compile(r"%[\w.\-#]+"), "%v"),
+    (re.compile(r"\bloc\(.*?\)"), ""),
+    (re.compile(r"metadata=\{.*?\}"), ""),
+    (re.compile(r'"[^"]*"'), '"_"'),
+    (re.compile(r"#\d+"), "#n"),
+    (re.compile(r"\s+"), " "),
+)
+
+_STABLEHLO_OP = re.compile(r"\b(?:stablehlo|mhlo|func|sdy)\.([\w.]+)")
+# optimized HLO:  name = type opcode(...)
+_HLO_OP = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w\-]*)\(")
+
+
+def normalize(text: str) -> list[str]:
+    out = []
+    for line in text.splitlines():
+        for pat, rep in _NOISE:
+            line = pat.sub(rep, line)
+        line = line.strip()
+        if line:
+            out.append(line)
+    return out
+
+
+def op_histogram(text: str, stage: str) -> Counter:
+    pat = _STABLEHLO_OP if stage == "stablehlo" else _HLO_OP
+    return Counter(m.group(1) for m in pat.finditer(text))
+
+
+def _place(tree, mesh, specs):
+    return jax.tree.map(
+        lambda leaf, sp: jax.device_put(leaf, NamedSharding(mesh, sp)),
+        tree, specs)
+
+
+def lower_decode_step(cfg: ModelConfig, mesh=None,
+                      policy: ShardingPolicy | None = None,
+                      n_slots: int = 4, cache_len: int = 32):
+    """Lower ONE continuous-serve decode step (vector per-slot pos,
+    the shapes ``serve_continuous`` compiles). With ``mesh`` the inputs
+    are placed exactly as the engine's ``_Runner`` places them."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = LM.init_cache(cfg, n_slots, cache_len, jnp.dtype(cfg.dtype))
+    tokens = jnp.ones((n_slots, 1), jnp.int32)
+    pos = jnp.full((n_slots,), 7, jnp.int32)
+    fn = jax.jit(lambda p, c, t, q: LM.decode_step(p, c, t, q, cfg=cfg))
+    if mesh is None:
+        return fn.lower(params, cache, tokens, pos)
+    policy = policy or ShardingPolicy()
+    rules = activation_rules(cfg, mesh, policy)
+    params = _place(params, mesh,
+                    csb_shard_specs(params, mesh, policy=policy))
+    cache = _place(cache, mesh,
+                   cache_specs(cfg, cache, mesh, policy))
+    bspec = batch_specs(cfg, "decode", mesh)
+    tok_sp = fit_spec(bspec["tokens"], tokens.shape, mesh)
+    pos_sp = fit_spec(bspec["pos"], pos.shape, mesh)
+    if tok_sp is not None:
+        tokens = jax.device_put(tokens, NamedSharding(mesh, tok_sp))
+    if pos_sp is not None:
+        pos = jax.device_put(pos, NamedSharding(mesh, pos_sp))
+    with use_rules(rules):
+        return fn.lower(params, cache, tokens, pos)
+
+
+def hlo_texts(lowered, stage: str) -> str:
+    if stage == "stablehlo":
+        return lowered.as_text()
+    return lowered.compile().as_text()
+
+
+def hlo_diff(mixer: str = "hybrid", mesh_shape: tuple[int, int] = (2, 4),
+             stage: str = "opt", out_dir: str | None = None,
+             n_slots: int = 4, cache_len: int = 32) -> dict:
+    """The probe as a library call (tests use this). Returns a dict:
+    ``op_delta`` (op -> sharded_count - unsharded_count, zero-delta ops
+    omitted), ``n_changed_lines`` (normalized diff size), ``files``
+    (paths written when ``out_dir`` is given)."""
+    n_dev = mesh_shape[0] * mesh_shape[1]
+    if len(jax.devices()) < n_dev:
+        raise RuntimeError(
+            f"need {n_dev} devices for mesh {mesh_shape}; run with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    cfg = make_cfg(mixer)
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]).reshape(mesh_shape),
+                ("data", "model"))
+    ref = hlo_texts(lower_decode_step(cfg, None, n_slots=n_slots,
+                                      cache_len=cache_len), stage)
+    shr = hlo_texts(lower_decode_step(cfg, mesh, n_slots=n_slots,
+                                      cache_len=cache_len), stage)
+    h_ref = op_histogram(ref, stage)
+    h_shr = op_histogram(shr, stage)
+    delta = {op: h_shr.get(op, 0) - h_ref.get(op, 0)
+             for op in sorted(set(h_ref) | set(h_shr))
+             if h_shr.get(op, 0) != h_ref.get(op, 0)}
+    n_ref, n_shr = normalize(ref), normalize(shr)
+    changed = sum(1 for ln in difflib.unified_diff(n_ref, n_shr, n=0)
+                  if ln[:1] in "+-" and ln[:3] not in ("+++", "---"))
+    files = []
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{mixer}_{mesh_shape[0]}x{mesh_shape[1]}_{stage}"
+        for name, text in ((f"decode_unsharded_{tag}.txt", ref),
+                           (f"decode_sharded_{tag}.txt", shr)):
+            path = os.path.join(out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            files.append(path)
+    return {"mixer": mixer, "mesh": mesh_shape, "stage": stage,
+            "op_delta": delta, "n_changed_lines": changed,
+            "ops_unsharded": sum(h_ref.values()),
+            "ops_sharded": sum(h_shr.values()), "files": files}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="structural HLO diff, sharded vs unsharded decode")
+    ap.add_argument("--mixer", default="hybrid", choices=sorted(CONFIGS))
+    ap.add_argument("--mesh", default="2x4",
+                    help="data x model, e.g. 2x4 or 1x8")
+    ap.add_argument("--stage", default="opt",
+                    choices=("stablehlo", "opt"),
+                    help="stablehlo = pre-partitioning (annotations); "
+                         "opt = post-SPMD optimized HLO (what runs)")
+    ap.add_argument("--out", default="/tmp/hlo_diff",
+                    help="directory for the full dumped programs")
+    ap.add_argument("--full-diff", action="store_true",
+                    help="print the normalized unified diff, not just "
+                         "the histogram")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+
+    res = hlo_diff(args.mixer, mesh_shape, stage=args.stage,
+                   out_dir=args.out)
+    print(f"decode step: {args.mixer} on {args.mesh} ({args.stage})")
+    print(f"  ops: {res['ops_unsharded']} unsharded -> "
+          f"{res['ops_sharded']} sharded; "
+          f"{res['n_changed_lines']} normalized lines differ")
+    print("  op histogram delta (sharded - unsharded):")
+    for op, d in sorted(res["op_delta"].items(), key=lambda kv: -abs(kv[1])):
+        print(f"    {op:<32} {d:+d}")
+    for path in res["files"]:
+        print(f"  wrote {path}")
+    if args.full_diff:
+        cfg = make_cfg(args.mixer)
+        mesh = Mesh(np.asarray(
+            jax.devices()[:mesh_shape[0] * mesh_shape[1]]
+        ).reshape(mesh_shape), ("data", "model"))
+        ref = normalize(hlo_texts(lower_decode_step(cfg), args.stage))
+        shr = normalize(hlo_texts(lower_decode_step(cfg, mesh),
+                                  args.stage))
+        sys.stdout.writelines(
+            ln + "\n" for ln in difflib.unified_diff(
+                ref, shr, "unsharded", "sharded", lineterm=""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Latency breakdown from a Chrome-trace JSON file.
+
+Reads a trace written by ``repro.obs.trace`` (or any conforming
+``trace_event`` JSON), prints a per-span-name table (count, total,
+mean, exact p50/p95/p99, max — sorted by total time) and, when the
+trace holds a serve run, the request-lifecycle table (queue wait ->
+prefill -> TTFT -> per-request decode).
+
+Usage:
+  PYTHONPATH=src python tools/trace_summary.py trace.json
+  PYTHONPATH=src python tools/trace_summary.py trace.json --json
+
+The heavy lifting lives in :mod:`repro.obs.summary` so tests and docs
+snippets can call it in-process; this file is the CLI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.summary import (  # noqa: E402
+    load_trace, report, request_table, summarize,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="latency breakdown from a Chrome-trace JSON")
+    ap.add_argument("trace", help="path to the exported trace file")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary rows as JSON instead of a "
+                         "formatted table")
+    args = ap.parse_args()
+    if not os.path.exists(args.trace):
+        print(f"no such trace file: {args.trace}", file=sys.stderr)
+        return 1
+    if args.json:
+        events = load_trace(args.trace)
+        print(json.dumps({"spans": summarize(events),
+                          "request_lifecycle": request_table(events)},
+                         indent=2))
+        return 0
+    print(report(args.trace))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
