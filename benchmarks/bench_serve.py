@@ -21,6 +21,11 @@ noise-robust min-of-N statistic:
       token parity with the non-shared engine, nonzero prefix hits and
       a real prefill-token reduction before emitting, so the row can
       never report a number the sharing didn't earn.
+  serve/disagg/us_per_token    — the paged trace through
+      ``serve_disaggregated`` (prefill tier -> PageHandoff -> decode
+      tier); derived = tokens/sec. Token parity with the single-engine
+      paged run is asserted before emitting, so the row gates the
+      handoff overhead, never a divergent computation.
   serve/frames/us_per_frame    — ``rnn_serve_frames`` over a
       CSB-compressed LSTM (the paper's faster-than-realtime workload);
       derived = the realtime criterion check (<500 us is only
@@ -37,8 +42,11 @@ noise-robust min-of-N statistic:
 Informational rows (never gate: us_per_call = 0): achieved slot
 occupancy, the scheduler's prefill/decode-step counts, the paged
 memory footprint (peak pool tokens vs the contiguous cache the same
-trace would pin), the prefix-sharing counters, and the ``serve/obs/*``
-lane: request-lifecycle percentiles (TTFT, queue wait, per-step wall)
+trace would pin), the prefix-sharing counters, the disagg handoff
+counters, ``serve/router/slo_attainment`` (fleet-wide p99 latency +
+deadline attainment per routing policy from the trace-driven
+multi-replica dryrun — host-side replay, no device work, so it never
+belongs in a gated row), and the ``serve/obs/*`` lane: request-lifecycle percentiles (TTFT, queue wait, per-step wall)
 from one TRACED run of the same trace, the engine's compile-vs-steady
 throughput split, and the measured tracing overhead (traced vs
 untraced us/token — the gated rows above always run with tracing off,
@@ -54,8 +62,9 @@ import numpy as np
 from repro.cells import init_params as cell_init, make_cell
 from repro.core import CSBSpec, csb_masks, csb_project, padded_csb_from_dense
 from repro.models import ModelConfig, init_params
-from repro.serve import Request, ServeConfig, generate, rnn_serve_frames, \
-    serve_continuous
+from repro.serve import EngineConfig, Request, generate, \
+    rnn_serve_frames, serve_continuous, serve_disaggregated
+from repro.serve.router import make_arrival_trace, simulate_replicas
 
 from .common import emit
 
@@ -88,10 +97,11 @@ def run() -> None:
     reqs = _trace(rng)
 
     # -- continuous batching (min-of-3 after a compile warmup) -------------
-    serve_continuous(params, CFG, reqs, n_slots=N_SLOTS)    # warmup
+    ccfg = EngineConfig(n_slots=N_SLOTS)
+    serve_continuous(params, CFG, reqs, ccfg)               # warmup
     best = None
     for _ in range(3):
-        r = serve_continuous(params, CFG, reqs, n_slots=N_SLOTS)
+        r = serve_continuous(params, CFG, reqs, ccfg)
         if best is None or r.wall_s < best.wall_s:
             best = r
     ntok = best.stats["generated_tokens"]
@@ -104,12 +114,11 @@ def run() -> None:
          f"decode={best.stats['decode_steps']}")
 
     # -- paged cache, same trace (min-of-3 after a compile warmup) ---------
-    serve_continuous(params, CFG, reqs, n_slots=N_SLOTS, paged=True,
-                     page_size=8)                           # warmup
+    pcfg = EngineConfig(n_slots=N_SLOTS, paged=True, page_size=8)
+    serve_continuous(params, CFG, reqs, pcfg)               # warmup
     bestp = None
     for _ in range(3):
-        r = serve_continuous(params, CFG, reqs, n_slots=N_SLOTS,
-                             paged=True, page_size=8)
+        r = serve_continuous(params, CFG, reqs, pcfg)
         if bestp is None or r.wall_s < bestp.wall_s:
             bestp = r
     ntok = bestp.stats["generated_tokens"]
@@ -130,14 +139,13 @@ def run() -> None:
         preqs.append(Request(
             rid=i, tokens=np.concatenate([sys_p, tail]),
             max_new_tokens=int(rng.integers(6, 13)), arrival=(i // 4) * 4))
-    off = serve_continuous(params, CFG, preqs, n_slots=N_SLOTS,
-                           paged=True, page_size=8)
-    serve_continuous(params, CFG, preqs, n_slots=N_SLOTS, paged=True,
-                     page_size=8, prefix_cache=True)         # warmup
+    xcfg = EngineConfig(n_slots=N_SLOTS, paged=True, page_size=8,
+                        prefix_cache=True)
+    off = serve_continuous(params, CFG, preqs, pcfg)
+    serve_continuous(params, CFG, preqs, xcfg)               # warmup
     bestx = None
     for _ in range(3):
-        r = serve_continuous(params, CFG, preqs, n_slots=N_SLOTS,
-                             paged=True, page_size=8, prefix_cache=True)
+        r = serve_continuous(params, CFG, preqs, xcfg)
         if bestx is None or r.wall_s < bestx.wall_s:
             bestx = r
     assert bestx.tokens == off.tokens, \
@@ -155,18 +163,50 @@ def run() -> None:
          f"vs{off.stats['prefill_tokens']};"
          f"cow={bestx.stats['paging']['cow_copies']}")
 
+    # -- disaggregated prefill/decode tiers, same paged trace --------------
+    serve_disaggregated(params, CFG, reqs, pcfg)             # warmup
+    bestd = None
+    for _ in range(3):
+        r = serve_disaggregated(params, CFG, reqs, pcfg)
+        if bestd is None or r.wall_s < bestd.wall_s:
+            bestd = r
+    assert bestd.tokens == bestp.tokens, \
+        "disaggregated run diverged from the single-engine paged run"
+    ntok = bestd.stats["generated_tokens"]
+    emit("serve/disagg/us_per_token", bestd.wall_s * 1e6 / ntok,
+         f"{ntok / bestd.wall_s:.1f}")
+    emit("serve/disagg/handoff", 0.0,
+         f"handoffs={bestd.stats['handoffs']};"
+         f"pages={bestd.stats['handoff_pages']};"
+         f"prefill_tokens={bestd.stats['prefill_tokens']}")
+
+    # -- router dryrun: fleet SLO attainment per policy --------------------
+    # Host-side replay (simulate_admission), so the row is informational:
+    # it documents what the routing policies deliver on a deadline-
+    # carrying Poisson trace, not a device timing.
+    rtrace = make_arrival_trace(np.random.default_rng(23), 24,
+                                vocab=CFG.vocab, mean_gap_steps=0.5,
+                                deadline_slack=2.0, step_time_us=1.0)
+    parts = []
+    for pol in ("round_robin", "least_loaded"):
+        s = simulate_replicas(rtrace, 2, policy=pol, n_slots=N_SLOTS,
+                              step_time_us=1.0)
+        parts.append(f"{pol}={s['slo_attainment']:.4f}"
+                     f"(p99={s['latency_us']['p99']:.1f}us)")
+    emit("serve/router/slo_attainment", 0.0, ";".join(parts))
+
     # -- fixed-batch generate ----------------------------------------------
     prompts = jax.numpy.asarray(
         rng.integers(0, CFG.vocab, size=(8, 12)), dtype="int32")
-    scfg = ServeConfig(max_new_tokens=8)
-    generate(params, CFG, prompts, scfg)                    # warmup
+    gcfg = EngineConfig(max_new_tokens=8)
+    generate(params, CFG, prompts, gcfg)                    # warmup
     best_s = float("inf")
     for _ in range(3):
         t0 = time.perf_counter()
-        out = generate(params, CFG, prompts, scfg)
+        out = generate(params, CFG, prompts, gcfg)
         jax.block_until_ready(out)
         best_s = min(best_s, time.perf_counter() - t0)
-    ntok = prompts.shape[0] * scfg.max_new_tokens
+    ntok = prompts.shape[0] * gcfg.max_new_tokens
     emit("serve/generate/us_per_token", best_s * 1e6 / ntok,
          f"{ntok / best_s:.1f}")
 
@@ -187,10 +227,10 @@ def run() -> None:
     frames = jax.random.normal(jax.random.PRNGKey(3), (24, 4, 64))
     best_us = float("inf")
     frame_us = None
+    fcfg = EngineConfig(frame_warmup=1, collect_frame_times=True)
     for _ in range(3):
         _, _, us, ft = rnn_serve_frames(cell, csb_params, frames,
-                                        warmup=1,
-                                        collect_frame_times=True)
+                                        config=fcfg)
         if us < best_us:
             best_us, frame_us = us, ft
     emit("serve/frames/us_per_frame", best_us,
@@ -214,7 +254,7 @@ def run() -> None:
     obs.enable_all()
     best_on = None
     for _ in range(3):
-        r = serve_continuous(params, CFG, reqs, n_slots=N_SLOTS)
+        r = serve_continuous(params, CFG, reqs, ccfg)
         if best_on is None or r.wall_s < best_on.wall_s:
             best_on = r
     reg = obs_metrics.get()

@@ -51,7 +51,7 @@ from repro.cells import init_params as cell_init, make_cell
 from repro.core import CSBSpec, csb_masks, csb_project, padded_csb_from_dense
 from repro.models import ModelConfig, init_params
 from repro.serve import (
-    Request, ServeConfig, generate, rnn_serve_frames, serve_continuous,
+    EngineConfig, Request, generate, rnn_serve_frames, serve_continuous,
 )
 
 mesh = None
@@ -79,8 +79,8 @@ requests = [
 print(f"\n{len(requests)} requests, prompt lens "
       f"{[r.prompt_len for r in requests]}, arrivals "
       f"{[r.arrival for r in requests]}, 4 slots, PAGED cache")
-res = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh,
-                       paged=True, page_size=8)
+paged_cfg = EngineConfig(n_slots=4, paged=True, page_size=8)
+res = serve_continuous(params, cfg, requests, paged_cfg, mesh=mesh)
 st = res.stats
 pg = st["paging"]
 print(f"paged serve: {st['requests']} requests, "
@@ -92,7 +92,8 @@ print(f"paged serve: {st['requests']} requests, "
 print(f"  pages: peak {pg['peak_pages']}/{pg['n_pages']} x "
       f"{pg['page_size']} tokens, internal fragmentation "
       f"{pg['internal_fragmentation']:.1%}")
-res_contig = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh)
+res_contig = serve_continuous(params, cfg, requests,
+                              EngineConfig(n_slots=4), mesh=mesh)
 assert res.tokens == res_contig.tokens, \
     "paged and contiguous engines must emit identical tokens"
 print("  paged tokens == contiguous tokens: verified")
@@ -105,12 +106,14 @@ shorts = [Request(rid=101 + i,
                   max_new_tokens=8) for i in range(4)]      # total 16
 cache_len = 48
 budget = 2 * cache_len                                      # 96 tokens
-paged = serve_continuous(params, cfg, [long_req] + shorts, n_slots=4,
-                         paged=True, page_size=8, cache_len=cache_len,
-                         pool_pages=budget // 8, mesh=mesh)
-contig = serve_continuous(params, cfg, [long_req] + shorts,
-                          n_slots=budget // cache_len, cache_len=cache_len,
-                          mesh=mesh)
+paged = serve_continuous(
+    params, cfg, [long_req] + shorts,
+    EngineConfig(n_slots=4, paged=True, page_size=8, cache_len=cache_len,
+                 pool_pages=budget // 8), mesh=mesh)
+contig = serve_continuous(
+    params, cfg, [long_req] + shorts,
+    EngineConfig(n_slots=budget // cache_len, cache_len=cache_len),
+    mesh=mesh)
 assert paged.tokens == contig.tokens
 assert paged.stats["peak_active"] > contig.stats["peak_active"]
 print(f"\nsame {budget}-token budget: contiguous fits "
@@ -129,10 +132,10 @@ shared_reqs = [
             max_new_tokens=int(rng.integers(6, 13)), arrival=(i // 3) * 4)
     for i in range(9)
 ]
-base = serve_continuous(params, cfg, shared_reqs, n_slots=4, mesh=mesh,
-                        paged=True, page_size=8)
-shared = serve_continuous(params, cfg, shared_reqs, n_slots=4, mesh=mesh,
-                          paged=True, page_size=8, prefix_cache=True)
+base = serve_continuous(params, cfg, shared_reqs, paged_cfg, mesh=mesh)
+shared = serve_continuous(
+    params, cfg, shared_reqs,
+    paged_cfg.replace(prefix_cache=True), mesh=mesh)
 assert shared.tokens == base.tokens, \
     "prefix sharing must not change a single output token"
 # every request past the first matches the system prompt in the trie
@@ -151,7 +154,7 @@ print(f"  prefill compute: {base.stats['prefill_tokens']} tokens without "
 # -- 4. fixed-batch LM serving ---------------------------------------------
 prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
 t0 = time.perf_counter()
-out = generate(params, cfg, prompts, ServeConfig(max_new_tokens=16),
+out = generate(params, cfg, prompts, EngineConfig(max_new_tokens=16),
                mesh=mesh)
 jax.block_until_ready(out)
 dt = time.perf_counter() - t0
@@ -188,8 +191,7 @@ from repro.obs import trace as obs_trace
 from repro.obs.summary import report
 
 obs.enable_all()
-traced = serve_continuous(params, cfg, requests, n_slots=4, mesh=mesh,
-                          paged=True, page_size=8)
+traced = serve_continuous(params, cfg, requests, paged_cfg, mesh=mesh)
 assert traced.tokens == res.tokens          # tracing changes nothing
 trace_path = obs_trace.export_chrome("serve_trace.json")
 obs.disable_all()

@@ -221,8 +221,21 @@ def serve_report(cfg, shp, rl, chips: int, page_size: int = 64) -> dict:
     ``internal_fragmentation`` is the token capacity wasted inside
     allocated pages (the partial-last-page cost the page size trades
     against table size).
+
+    The ``router`` sub-record is the trace-driven multi-replica dryrun
+    (``serve.router.simulate_replicas``): a Poisson arrival trace with
+    per-request deadlines is routed over 2 replicas of this cell under
+    each routing policy, using the cell's roofline step time as the
+    per-step cost model — p50/p99 TTFT/latency and SLO attainment per
+    policy, comparable across cells before any hardware run. (Slot
+    count is capped at 16 for the routing replay: the policy
+    comparison, not the absolute slot count, is the signal — the
+    uncapped admission replay above keeps the cell's real slots.)
     """
     from repro.serve.paging import PagePool, pages_for
+    from repro.serve.router import (
+        POLICIES, make_arrival_trace, simulate_replicas,
+    )
     from repro.serve.scheduler import Request, simulate_admission
 
     slots = shp.global_batch
@@ -246,6 +259,22 @@ def serve_report(cfg, shp, rl, chips: int, page_size: int = 64) -> dict:
                         arrival=r.arrival) for r in reqs], pool=pool)
     paging = paged_sim.pop("paging")
     peak_tokens = paging["peak_pages"] * page_size
+
+    step_us = step_s * 1e6 if step_s > 0 else 1.0
+    rslots = min(slots, 16)
+    rtrace = make_arrival_trace(
+        np.random.default_rng(slots * 13 + shp.seq_len), rslots * 6,
+        mean_gap_steps=0.5, deadline_slack=4.0, step_time_us=step_us)
+    router: dict = {"replicas": 2, "slots_per_replica": rslots,
+                    "step_time_us": round(step_us, 3), "policies": {}}
+    for pol in POLICIES:
+        rsim = simulate_replicas(rtrace, 2, policy=pol, n_slots=rslots,
+                                 step_time_us=step_us)
+        router["policies"][pol] = {
+            "ttft_us": rsim["ttft_us"],
+            "latency_us": rsim["latency_us"],
+            "slo_attainment": rsim["slo_attainment"],
+        }
     return {
         **sim,
         "chips": chips,
@@ -262,6 +291,7 @@ def serve_report(cfg, shp, rl, chips: int, page_size: int = 64) -> dict:
                 peak_tokens / (slots * cache_len), 4),
             "page_stalls": paged_sim.get("page_stalls", 0),
         },
+        "router": router,
     }
 
 

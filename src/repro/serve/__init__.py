@@ -1,16 +1,29 @@
 """repro.serve — batched + continuous-batching inference loops.
 
-``engine`` owns the device loops (fixed-batch ``generate``, slot-based
+``config`` owns the unified :class:`EngineConfig` every entry point
+consumes (plus the deprecated ``ServeConfig`` shim); ``engine`` owns
+the device loops (fixed-batch ``generate``, slot-based
 ``serve_continuous`` — contiguous or paged cache, pow2 prompt-bucketed
 prefill, copy-on-write prefix sharing — and frame-by-frame
-``rnn_serve_frames``), all of which run sharded under the ``dist`` rules
-when a mesh is supplied; ``scheduler`` owns request admission and
+``rnn_serve_frames``), all of which run sharded under the ``dist``
+rules when a mesh is supplied; ``disagg`` splits the engine into a
+prefill tier and a fixed-slot decode tier joined by explicit
+:class:`PageHandoff` remaps; ``router`` places a request trace over N
+engine replicas (load-aware via ``simulate_admission``) and simulates
+fleet-wide SLO attainment; ``scheduler`` owns request admission and
 slot/page-granular cache reuse; ``paging`` owns the fixed-size
-token-page pool (free list + dense page table + refcounted prefix trie)
-behind the paged cache. See docs/serving.md for the end-to-end tour.
+token-page pool (free list + dense page table + refcounted prefix
+trie) behind the paged cache. See docs/serving.md for the end-to-end
+tour.
 """
+from .config import EngineConfig, ServeConfig
+from .disagg import (
+    DecodeTier,
+    PageHandoff,
+    PrefillTier,
+    serve_disaggregated,
+)
 from .engine import (
-    ServeConfig,
     ServeResult,
     bucket_len,
     generate,
@@ -19,6 +32,14 @@ from .engine import (
     shard_cell_params,
 )
 from .paging import PagePool, SharedInfo, pages_for
+from .router import (
+    POLICIES,
+    Router,
+    RouterResult,
+    make_arrival_trace,
+    route,
+    simulate_replicas,
+)
 from .scheduler import (
     Request,
     SlotScheduler,
@@ -35,8 +56,12 @@ from .scheduler import (
 )
 
 __all__ = [
-    "ServeConfig", "ServeResult", "bucket_len", "generate",
-    "rnn_serve_frames", "serve_continuous", "shard_cell_params",
+    "EngineConfig", "ServeConfig", "ServeResult", "bucket_len",
+    "generate", "rnn_serve_frames", "serve_continuous",
+    "shard_cell_params",
+    "DecodeTier", "PageHandoff", "PrefillTier", "serve_disaggregated",
+    "POLICIES", "Router", "RouterResult", "make_arrival_trace", "route",
+    "simulate_replicas",
     "PagePool", "SharedInfo", "pages_for",
     "Request", "SlotScheduler", "cache_len_of", "copy_page_cache",
     "evict_slot", "evict_slot_state", "fit_cache_len", "grow_cache",

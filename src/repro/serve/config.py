@@ -1,0 +1,165 @@
+"""One serving configuration object for every engine entry point.
+
+``serve_continuous`` grew ten loose keyword knobs (slots, cache length,
+paging, bucketing, prefix sharing, the Pallas decode kernel, ...) while
+``generate`` took a separate three-field ``ServeConfig`` — the same
+engine, two half-configs. :class:`EngineConfig` folds all of it into a
+single validated frozen dataclass consumed by ``generate``,
+``serve_continuous``, ``rnn_serve_frames``, ``serve_disaggregated`` and
+the multi-replica :class:`repro.serve.router.Router`.
+
+Cross-field constraints live in ``__post_init__`` so an invalid
+combination fails at construction, not three layers deep in the engine:
+``use_kernel``/``prefix_cache``/``pool_pages`` all require ``paged``
+(the kernel walks the page table; the trie shares pages; the pool IS
+the paged budget).
+
+Deprecation (one release): the old loose kwargs still work through
+:func:`resolve_config` — they are mapped onto an ``EngineConfig`` and a
+``DeprecationWarning`` is emitted. ``ServeConfig`` remains importable
+as a warning subclass of ``EngineConfig`` so old call sites keep
+running unchanged. See docs/serving.md for the migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+__all__ = ["EngineConfig", "ServeConfig", "resolve_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Unified serving configuration (see module docstring).
+
+    Generation:
+      ``max_new_tokens`` — tokens to generate per request/batch row.
+      ``temperature``    — 0 => greedy (the parity-testable path).
+      ``cache_len``      — decode cache time capacity; default fits
+                           prompt + new tokens.
+
+    Continuous batching:
+      ``n_slots``        — fixed decode batch width.
+
+    Paged cache (``paged=True``):
+      ``page_size``      — tokens per physical page.
+      ``pool_pages``     — pool capacity in pages (default: the full
+                           contiguous footprint ``n_slots * max_pages``).
+      ``prefix_cache``   — refcounted radix-trie prompt sharing + CoW.
+      ``use_kernel``     — Pallas paged-attention decode kernel.
+
+    Prefill:
+      ``bucket_prompts`` — pow2 prompt buckets (None: on when paged,
+                           auto-off for SSD/hybrid mixers).
+
+    Frame serving (``rnn_serve_frames``):
+      ``frame_warmup``         — compile/warmup steps before timing.
+      ``collect_frame_times``  — per-frame blocking latency pass.
+    """
+
+    # generation
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    cache_len: int | None = None
+    # continuous batching
+    n_slots: int = 4
+    # paged cache
+    paged: bool = False
+    page_size: int = 16
+    pool_pages: int | None = None
+    prefix_cache: bool = False
+    use_kernel: bool = False
+    # prefill
+    bucket_prompts: bool | None = None
+    # frame serving
+    frame_warmup: int = 2
+    collect_frame_times: bool = False
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if self.cache_len is not None and self.cache_len < 1:
+            raise ValueError("cache_len must be >= 1 (or None)")
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.frame_warmup < 0:
+            raise ValueError("frame_warmup must be >= 0")
+        if not self.paged:
+            # every paged-only knob must fail loudly instead of being
+            # silently ignored by the contiguous engine
+            for knob in ("use_kernel", "prefix_cache"):
+                if getattr(self, knob):
+                    raise ValueError(f"{knob}=True requires paged=True")
+            if self.pool_pages is not None:
+                raise ValueError("pool_pages requires paged=True")
+        if self.pool_pages is not None and self.pool_pages < 1:
+            raise ValueError("pool_pages must be >= 1 (or None)")
+
+    def replace(self, **updates) -> "EngineConfig":
+        """A modified copy (re-validated); always a base EngineConfig."""
+        cfg = _as_base(self)
+        return dataclasses.replace(cfg, **updates)
+
+
+def _as_base(config: EngineConfig) -> EngineConfig:
+    """Normalize subclasses (the ServeConfig shim) to plain EngineConfig
+    so ``dataclasses.replace`` never re-enters a shim ``__init__``."""
+    if type(config) is EngineConfig:
+        return config
+    return EngineConfig(**{f.name: getattr(config, f.name)
+                           for f in dataclasses.fields(EngineConfig)})
+
+
+class ServeConfig(EngineConfig):
+    """Deprecated: the old three-field generate config. Constructs an
+    :class:`EngineConfig` and warns; removed next release."""
+
+    def __init__(self, max_new_tokens: int = 32, temperature: float = 0.0,
+                 cache_len: int | None = None):
+        warnings.warn(
+            "ServeConfig is deprecated; use repro.serve.EngineConfig "
+            "(same fields plus the serve/paging/kernel knobs)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(max_new_tokens=max_new_tokens,
+                         temperature=temperature, cache_len=cache_len)
+
+
+# the loose serve_continuous kwargs the one-release shim still accepts
+LEGACY_SERVE_KWARGS = frozenset({
+    "n_slots", "temperature", "cache_len", "paged", "page_size",
+    "pool_pages", "bucket_prompts", "prefix_cache", "use_kernel",
+    "max_new_tokens",
+})
+
+
+def resolve_config(config: EngineConfig | None, legacy: dict, *,
+                   caller: str) -> EngineConfig:
+    """Fold deprecated loose kwargs onto an :class:`EngineConfig`.
+
+    ``legacy`` is the caller's ``**kwargs`` capture. Unknown names raise
+    ``TypeError`` (exactly like a real unexpected keyword); known ones
+    override ``config`` (or the defaults) and emit a single
+    ``DeprecationWarning`` naming the replacement field(s). The merged
+    config re-runs ``__post_init__``, so an invalid legacy combination
+    (``prefix_cache=True`` without ``paged=True``) still raises
+    ``ValueError`` as the engine always did.
+    """
+    if legacy:
+        unknown = sorted(set(legacy) - LEGACY_SERVE_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"{caller}() got unexpected keyword argument(s) {unknown}")
+        named = ", ".join(f"{k}=..." for k in sorted(legacy))
+        warnings.warn(
+            f"passing {sorted(legacy)} to {caller}() is deprecated; pass "
+            f"config=EngineConfig({named}) instead (one-release shim)",
+            DeprecationWarning, stacklevel=3)
+        base = _as_base(config) if config is not None else EngineConfig()
+        return dataclasses.replace(base, **legacy)
+    if config is None:
+        return EngineConfig()
+    return _as_base(config)

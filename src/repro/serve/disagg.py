@@ -1,0 +1,407 @@
+"""Disaggregated serving: a prefill tier feeding a decode tier through
+explicit page handoffs.
+
+Continuous batching interleaves two workloads with opposite shapes on
+one engine: prefill is a bursty, throughput-bound batch matmul over a
+whole prompt; decode is a latency-bound single-token step that wants to
+stay hot and uninterrupted (the paper keeps its recurrent step resident
+on-chip for exactly this reason). This module splits them:
+
+* :class:`PrefillTier` — throughput-optimized: pow2 prompt-bucketed
+  full prefill (O(log max_len) compiled variants) and trie-aware
+  partial prefill (``prefill_partial`` against pages gathered from the
+  decode tier's pool). It owns its own :class:`~.engine._Runner`, so on
+  a real deployment the tiers can live on different meshes.
+* :class:`DecodeTier` — latency-optimized: a fixed set of decode slots
+  over its own :class:`~.paging.PagePool` and the once-compiled
+  vector-position paged decode step (optionally the Pallas kernel).
+* :class:`PageHandoff` — the explicit object crossing the boundary: one
+  completed prefill (prompt, sampled first token, single-request KV)
+  that :meth:`DecodeTier.accept` remaps into the decode pool —
+  copy-on-write first when the suffix starts inside a trie-shared page,
+  then page ``ensure`` + scatter, then trie registration — so refcount
+  conservation holds under prefix sharing (the ``PagePool.check()``
+  oracle is fuzzed over exactly this event sequence in
+  tests/test_paging.py).
+
+``serve_disaggregated`` orchestrates both tiers over one
+:class:`~.scheduler.SlotScheduler` (admission is by the decode pool's
+free pages, as always) and is token-for-token identical to
+``serve_continuous`` on the same trace: both run the same bucketed
+prefill, the same paged decode step, and split the rng in the same
+order. With :mod:`repro.obs` enabled, the run emits per-tier queue-wait
+histograms, a ``serve/handoff`` span per handoff (with its page count)
+and decode-tier occupancy gauges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig
+from repro.models import lm as LM
+from repro.obs import metrics as obs_metrics, trace as obs_trace
+
+from .config import EngineConfig, resolve_config
+from .engine import (
+    ServeResult, _Runner, _gather_ctx, _resolve_mesh, _sampler, bucket_len,
+)
+from .paging import PagePool, SharedInfo, pages_for
+from .scheduler import (
+    Request, SlotScheduler, copy_page_cache, evict_slot_state,
+    fit_cache_len, insert_paged_cache, insert_paged_span,
+)
+
+PyTree = Any
+
+__all__ = ["PageHandoff", "PrefillTier", "DecodeTier",
+           "serve_disaggregated"]
+
+
+@dataclasses.dataclass
+class PageHandoff:
+    """One completed prefill crossing the tier boundary.
+
+    ``req_cache`` is the single-request contiguous KV/state the prefill
+    produced (bucket-padded time extent); ``shared`` is the decode
+    pool's trie match recorded at admission (None / zero pages when the
+    prompt was prefilled whole). The handoff is inert data — nothing is
+    mapped until :meth:`DecodeTier.accept` remaps it into the pool.
+    """
+
+    rid: int
+    slot: int                      # decode-tier slot reserved at admission
+    tokens: np.ndarray             # full prompt (trie registration key)
+    prompt_len: int
+    first_token: int               # sampled off the prefill logits
+    req_cache: PyTree
+    shared: SharedInfo | None
+    created_ns: int                # prefill completion (queue-wait clock)
+
+    @property
+    def suffix_start(self) -> int:
+        if self.shared is not None and self.shared.shared_pages > 0:
+            return self.shared.suffix_start
+        return 0
+
+
+class PrefillTier:
+    """Throughput tier: bucketed full prefill + trie-aware partial
+    prefill, reusing the engine's jitted ``prefill``/``prefill_partial``
+    executables. Produces :class:`PageHandoff` objects; never touches
+    the decode pool."""
+
+    def __init__(self, params, cfg: ModelConfig, config: EngineConfig,
+                 *, mesh=None, policy=None):
+        self.cfg = cfg
+        self.runner = _Runner(params, cfg, mesh, policy)
+        bucket = (config.bucket_prompts
+                  if config.bucket_prompts is not None else True)
+        self.bucket = bucket and cfg.mixer in ("attn", "mla")
+        self.prefill_tokens = 0
+
+    def run(self, req: Request, slot: int, sample, key, *,
+            shared: SharedInfo | None = None,
+            ctx: PyTree | None = None) -> PageHandoff:
+        """Prefill one admitted request (suffix-only on a trie match,
+        against ``ctx`` gathered from the decode tier) and sample its
+        first token. Returns the handoff for the decode tier."""
+        tokens = np.asarray(req.tokens)
+        plen = req.prompt_len
+        if shared is not None and shared.shared_pages > 0:
+            sstart = shared.suffix_start
+            s_real = plen - sstart
+            suffix = tokens[sstart:]
+            if self.bucket:
+                suffix = np.pad(suffix,
+                                [(0, bucket_len(s_real) - s_real)])
+            logits, req_cache = self.runner.prefill_partial(
+                jnp.asarray(suffix)[None], ctx, start=sstart,
+                last_pos=s_real - 1)
+            self.prefill_tokens += int(suffix.shape[0])
+        elif self.bucket:
+            pad = bucket_len(plen) - plen
+            padded = np.pad(tokens,
+                            [(0, pad)] + [(0, 0)] * (tokens.ndim - 1))
+            logits, req_cache = self.runner.prefill(
+                jnp.asarray(padded)[None], last_pos=plen - 1)
+            self.prefill_tokens += int(padded.shape[0])
+        else:
+            logits, req_cache = self.runner.prefill(
+                jnp.asarray(tokens)[None])
+            self.prefill_tokens += plen
+        first = int(np.asarray(sample(logits, key)).reshape(-1)[0])
+        return PageHandoff(rid=req.rid, slot=slot, tokens=tokens,
+                           prompt_len=plen, first_token=first,
+                           req_cache=req_cache, shared=shared,
+                           created_ns=time.perf_counter_ns())
+
+
+class DecodeTier:
+    """Latency tier: fixed decode slots over a private
+    :class:`~.paging.PagePool`, accepting handoffs by page remap and
+    stepping every active slot through the once-compiled vector-pos
+    paged decode step."""
+
+    def __init__(self, params, cfg: ModelConfig, config: EngineConfig,
+                 cache_len: int, *, mesh=None, policy=None):
+        self.cfg = cfg
+        self.config = config
+        self.runner = _Runner(params, cfg, mesh, policy)
+        self.prefix = config.prefix_cache and cfg.mixer in ("attn", "mla")
+        max_pages = pages_for(cache_len, config.page_size)
+        n_pool = (config.n_slots * max_pages
+                  if config.pool_pages is None else config.pool_pages)
+        self.pool = PagePool(config.page_size, n_pool, config.n_slots,
+                             max_pages, prefix_cache=self.prefix)
+        self.sched = SlotScheduler(config.n_slots, pool=self.pool)
+        self.cache = self.runner.place_cache(
+            LM.init_paged_cache(cfg, self.pool.n_pages, config.page_size,
+                                config.n_slots, jnp.dtype(cfg.dtype)),
+            paged=True)
+        self.cur = jnp.zeros((config.n_slots, 1), jnp.int32)
+        self._table_host = None
+        self._table_placed = None
+        self.handoffs = 0
+        self.handoff_pages = 0
+
+    def shared_ctx(self, slot: int):
+        """(SharedInfo, gathered ctx) for a trie-matched admission —
+        the prefill tier's partial-prefill input. The page row is
+        scratch-padded to a pow2 count so compiled partial-prefill
+        variants stay O(log max_pages). (None, None) on no match."""
+        info = self.pool.shared_info(slot)
+        if info is None or info.shared_pages == 0:
+            return None, None
+        sp = info.shared_pages
+        n_pad = 1 << max(sp - 1, 0).bit_length()
+        ctx_row = np.concatenate([
+            self.pool.slot_row(slot)[:sp],
+            np.full(n_pad - sp, self.pool.scratch_page, np.int32)])
+        return info, _gather_ctx(self.cache, ctx_row)
+
+    def accept(self, h: PageHandoff) -> bool:
+        """Remap a handoff into the decode pool: CoW the divergence
+        page when the suffix starts inside a shared page, ``ensure`` the
+        prompt's pages, scatter/insert the prefilled KV, then register
+        the prompt in the trie. Returns False when the request finished
+        at prefill (``max_new_tokens == 1`` — nothing is mapped)."""
+        t_acc = time.perf_counter_ns()
+        pool, runner = self.pool, self.runner
+        slot, plen = h.slot, h.prompt_len
+        alive = self.sched.started(slot, h.first_token)
+        n_pages = 0
+        if alive:
+            shared = h.shared is not None and h.shared.shared_pages > 0
+            if shared:
+                # divergence inside a shared page: private copy BEFORE
+                # the suffix write lands (refcount moves src -> dst)
+                cow = pool.cow_if_needed(slot)
+                if cow is not None:
+                    self.cache = copy_page_cache(self.cache, *cow)
+                pool.ensure(slot, plen)
+                self.cache = insert_paged_span(
+                    self.cache, runner.place_slot_cache(h.req_cache),
+                    pool.slot_row(slot), h.shared.suffix_start,
+                    plen - h.shared.suffix_start, slot)
+            else:
+                pool.ensure(slot, plen)
+                phys = list(pool.slot_pages(slot))
+                # pow2 scratch padding keeps the jitted insert variants
+                # O(log max_pages), as in the single engine
+                n_pad = 1 << max(len(phys) - 1, 0).bit_length()
+                phys += [pool.scratch_page] * (n_pad - len(phys))
+                req_cache = fit_cache_len(
+                    h.req_cache, len(phys) * self.config.page_size)
+                self.cache = insert_paged_cache(
+                    self.cache, runner.place_slot_cache(req_cache),
+                    phys, slot)
+            if self.prefix:
+                pool.register_prefix(slot, h.tokens)
+            self.cur = self.cur.at[slot, 0].set(h.first_token)
+            n_pages = len(pool.slot_pages(slot))
+        self.handoffs += 1
+        self.handoff_pages += n_pages
+        t_end = time.perf_counter_ns()
+        tr = obs_trace.get()
+        if tr is not None:
+            tr.complete("serve/handoff", h.created_ns,
+                        t_end - h.created_ns, track="handoff",
+                        args={"rid": h.rid, "slot": slot,
+                              "pages": n_pages,
+                              "shared_pages": (h.shared.shared_pages
+                                               if h.shared else 0)})
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.counter("serve/handoff/count").inc()
+            reg.counter("serve/handoff/pages").inc(n_pages)
+            # decode-tier queue wait: prefill completion -> pages mapped
+            reg.histogram("serve/disagg/handoff_queue_us").observe(
+                (t_acc - h.created_ns) / 1e3)
+        return alive
+
+    def step(self, sample, key) -> tuple[list[int], int]:
+        """One paged decode step over every active slot. Returns
+        (freed slots, active count); sets ``runner.last_cold``."""
+        sched, pool, runner = self.sched, self.pool, self.runner
+        active = sched.active_mask()
+        pos_host = sched.positions()
+        pos = runner.place_pos(jnp.asarray(pos_host))
+        for i in np.flatnonzero(active):
+            pool.ensure(int(i), int(pos_host[i]) + 1)
+        pool.tick()
+        fresh = pool.device_table()
+        if fresh is not self._table_host:
+            self._table_host = fresh
+            self._table_placed = runner.place_table(fresh)
+        lg, self.cache = runner.step_paged(
+            self.cache, runner.place_tokens(self.cur), pos,
+            self._table_placed, use_kernel=self.config.use_kernel)
+        nxt = sample(lg[:, -1], key)
+        nxt_host = np.asarray(nxt)          # blocks: true step latency
+        freed = sched.advance(nxt_host)
+        for slot in freed:
+            # pages returned inside the scheduler; SSM/conv state needs
+            # the device-side zero
+            self.cache = evict_slot_state(self.cache, slot)
+        self.cur = nxt[:, None].astype(jnp.int32)
+        reg = obs_metrics.get()
+        if reg is not None:
+            reg.gauge("serve/tier/decode_active").set(int(active.sum()))
+        return freed, int(active.sum())
+
+
+def serve_disaggregated(params, cfg: ModelConfig,
+                        requests: list[Request],
+                        config: EngineConfig | None = None, *,
+                        mesh=None, policy=None,
+                        rng: jax.Array | None = None,
+                        **legacy) -> ServeResult:
+    """Serve ``requests`` through split prefill/decode tiers.
+
+    Requires ``config.paged=True`` — the handoff IS a page remap into
+    the decode tier's pool. Tokens are identical to
+    ``serve_continuous`` with the same config on the same trace (same
+    bucketed prefill, same paged step, same rng split order), which the
+    bench lane asserts before emitting its gated row. The old loose
+    kwargs work through the same one-release deprecation shim as
+    ``serve_continuous``.
+    """
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "serve_disaggregated drives single-stream token ids; "
+            "codebook models go through generate()")
+    config = resolve_config(config, legacy, caller="serve_disaggregated")
+    if not config.paged:
+        raise ValueError(
+            "serve_disaggregated requires config.paged=True (the "
+            "prefill->decode handoff is a page remap)")
+    if not requests:
+        stats = SlotScheduler(config.n_slots).stats()
+        stats.update(cache_len=0, tokens_per_sec=0.0, paged=True,
+                     disagg=True, bucketed_prefill=False,
+                     prefix_cache=False, prefill_tokens=0,
+                     handoffs=0, handoff_pages=0,
+                     compile_time_s=0.0, steady_tokens_per_sec=0.0,
+                     sharded=_resolve_mesh(mesh) is not None)
+        stats["paging"] = PagePool(
+            config.page_size,
+            1 if config.pool_pages is None else config.pool_pages,
+            config.n_slots, 1).summary()
+        stats["page_stalls"] = 0
+        return ServeResult({}, stats, 0.0)
+    cache_len = config.cache_len or max(
+        r.prompt_len + r.max_new_tokens for r in requests)
+    short = [r for r in requests
+             if r.prompt_len + r.max_new_tokens > cache_len]
+    if short:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold request(s) "
+            f"{[r.rid for r in short]}")
+
+    prefill_tier = PrefillTier(params, cfg, config, mesh=mesh,
+                               policy=policy)
+    decode_tier = DecodeTier(params, cfg, config, cache_len, mesh=mesh,
+                             policy=policy)
+    sched = decode_tier.sched
+    for r in requests:
+        sched.submit(r)
+    sample = _sampler(cfg, config.temperature)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    prefix = decode_tier.prefix
+
+    def _admissions():
+        # one-at-a-time under the prefix cache so each handoff's trie
+        # registration is visible to the very next admission (same
+        # protocol as serve_continuous)
+        if not prefix:
+            yield from sched.admit()
+            return
+        while True:
+            batch = sched.admit(limit=1)
+            if not batch:
+                return
+            yield batch[0]
+
+    reg = obs_metrics.get()
+    eligible_ns: dict[int, int] = {}
+    compile_ns = steady_ns = steady_tokens = 0
+
+    t0 = time.perf_counter()
+    while sched.has_work():
+        if reg is not None:
+            now_ns = time.perf_counter_ns()
+            for rid in sched.arrived_pending():
+                eligible_ns.setdefault(rid, now_ns)
+            reg.gauge("serve/tier/prefill_backlog").set(
+                len(sched.arrived_pending()))
+        for slot, req in _admissions():
+            rng, k = jax.random.split(rng)
+            t_pf = time.perf_counter_ns()
+            if reg is not None:
+                # prefill-tier queue wait: eligible -> prefill start
+                reg.histogram("serve/disagg/prefill_queue_us").observe(
+                    (t_pf - eligible_ns.get(req.rid, t_pf)) / 1e3)
+            info, ctx = (decode_tier.shared_ctx(slot) if prefix
+                         else (None, None))
+            h = prefill_tier.run(req, slot, sample, k, shared=info,
+                                 ctx=ctx)
+            if prefill_tier.runner.last_cold:
+                compile_ns += time.perf_counter_ns() - t_pf
+            decode_tier.accept(h)
+        if not sched.active_mask().any():
+            sched.idle_tick()
+            continue
+        rng, k = jax.random.split(rng)
+        t_st = time.perf_counter_ns()
+        _, n_active = decode_tier.step(sample, k)
+        t_en = time.perf_counter_ns()
+        if decode_tier.runner.last_cold:
+            compile_ns += t_en - t_st
+        else:
+            steady_ns += t_en - t_st
+            steady_tokens += n_active
+    jax.block_until_ready(decode_tier.cache)
+    wall = time.perf_counter() - t0
+
+    stats = sched.stats()
+    stats["cache_len"] = cache_len
+    stats["paged"] = True
+    stats["disagg"] = True
+    stats["bucketed_prefill"] = prefill_tier.bucket
+    stats["prefix_cache"] = prefix
+    stats["prefill_tokens"] = prefill_tier.prefill_tokens
+    stats["handoffs"] = decode_tier.handoffs
+    stats["handoff_pages"] = decode_tier.handoff_pages
+    stats["tokens_per_sec"] = round(
+        stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
+    stats["compile_time_s"] = round(compile_ns / 1e9, 6)
+    stats["steady_tokens_per_sec"] = round(
+        steady_tokens / (steady_ns / 1e9), 3) if steady_ns > 0 else 0.0
+    stats["sharded"] = decode_tier.runner.mesh is not None
+    return ServeResult(sched.results, stats, wall)

@@ -51,6 +51,7 @@ from repro.models import ModelConfig
 from repro.models import lm as LM
 from repro.obs import metrics as obs_metrics, trace as obs_trace
 
+from .config import EngineConfig, ServeConfig, resolve_config
 from .paging import PagePool, pages_for
 from .scheduler import (
     _TIME_KEYS, Request, SlotScheduler, cache_len_of, copy_page_cache,
@@ -68,13 +69,6 @@ def bucket_len(n: int, floor: int = 8) -> int:
     prefill executables at O(log max_len) for arbitrary length traces
     (the floor merges the tiny lengths into one bucket)."""
     return 1 << max(max(n, floor) - 1, 0).bit_length()
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_new_tokens: int = 32
-    temperature: float = 0.0      # 0 => greedy
-    cache_len: int | None = None  # default: prompt + new tokens
 
 
 def _resolve_mesh(mesh):
@@ -307,13 +301,18 @@ def _sampler(cfg: ModelConfig, temperature: float):
 # fixed-batch generate
 # ---------------------------------------------------------------------------
 
-def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
+def generate(params, cfg: ModelConfig, tokens,
+             config: EngineConfig | None = None,
              rng: jax.Array | None = None, *, mesh=None, policy=None):
     """tokens: (B, S_prompt) (or (B, S, K) codebooks). Returns (B, S+new).
 
-    With a mesh (argument or active Rules), params/cache/batch run
-    sharded; results match the single-device path token-for-token.
+    ``config`` is the unified :class:`EngineConfig` (the deprecated
+    ``ServeConfig`` still works — it IS an EngineConfig, plus a
+    warning). With a mesh (argument or active Rules),
+    params/cache/batch run sharded; results match the single-device
+    path token-for-token.
     """
+    scfg = resolve_config(config, {}, caller="generate")
     b, s = tokens.shape[:2]
     total = scfg.cache_len or (s + scfg.max_new_tokens)
     runner = _Runner(params, cfg, mesh, policy)
@@ -381,16 +380,18 @@ def _gather_ctx(cache: PyTree, pages) -> PyTree:
 
 
 def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
-                     *, n_slots: int = 4, temperature: float = 0.0,
-                     cache_len: int | None = None, mesh=None, policy=None,
+                     config: EngineConfig | None = None, *,
+                     mesh=None, policy=None,
                      rng: jax.Array | None = None,
-                     paged: bool = False, page_size: int = 16,
-                     pool_pages: int | None = None,
-                     bucket_prompts: bool | None = None,
-                     prefix_cache: bool = False,
-                     use_kernel: bool = False) -> ServeResult:
+                     **legacy) -> ServeResult:
     """Serve ``requests`` (mixed prompt lengths, arriving over time)
-    through ``n_slots`` continuously-batched decode slots.
+    through ``config.n_slots`` continuously-batched decode slots.
+
+    All engine knobs ride on one :class:`EngineConfig` (serve + paging
+    + kernel + prefix fields, cross-validated at construction). The old
+    loose kwargs (``n_slots=``, ``paged=``, ...) still work for one
+    release through ``**legacy`` — they map onto the config and emit a
+    ``DeprecationWarning``.
 
     The decode step compiles once for the (n_slots, cache_len) shapes
     and runs every step with per-slot positions; admission prefills each
@@ -454,9 +455,17 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
         raise NotImplementedError(
             "serve_continuous drives single-stream token ids; codebook "
             "models go through generate()")
-    if prefix_cache and not paged:
-        raise ValueError("prefix_cache=True requires paged=True")
-    bucket = bucket_prompts if bucket_prompts is not None else paged
+    # invalid combinations (prefix_cache without paged, ...) raise
+    # ValueError inside EngineConfig.__post_init__ — including legacy
+    # kwargs, which re-validate when merged onto the config here
+    config = resolve_config(config, legacy, caller="serve_continuous")
+    n_slots, temperature = config.n_slots, config.temperature
+    cache_len, paged = config.cache_len, config.paged
+    page_size, pool_pages = config.page_size, config.pool_pages
+    use_kernel = config.use_kernel
+    bucket = (config.bucket_prompts if config.bucket_prompts is not None
+              else paged)
+    prefix_cache = config.prefix_cache
     bucket = bucket and cfg.mixer in ("attn", "mla")
     prefix = prefix_cache and cfg.mixer in ("attn", "mla")
     if not requests:
@@ -777,11 +786,18 @@ def shard_cell_params(params: dict, mesh, axis_name: str = "model") -> dict:
 
 
 def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
-                     state: PyTree | None = None, warmup: int = 2,
-                     *, mesh=None, axis_name: str = "model",
-                     collect_frame_times: bool = False):
+                     state: PyTree | None = None,
+                     warmup: int | None = None,
+                     *, config: EngineConfig | None = None, mesh=None,
+                     axis_name: str = "model",
+                     collect_frame_times: bool | None = None):
     """frames: (T, B, in_dim). Weights may be dense, PaddedCSB, or (with
     a mesh) ShardedCSB.
+
+    ``config.frame_warmup`` / ``config.collect_frame_times`` are the
+    :class:`EngineConfig` homes of the two knobs; the positional
+    ``warmup`` and ``collect_frame_times`` arguments override them when
+    given explicitly (both default to the config).
 
     With ``mesh=`` (or an active Rules mesh with a non-trivial "model"
     axis) the CSB weights are partitioned over the model axis and the
@@ -797,6 +813,11 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
     ``us_per_frame`` stays the throughput number; the per-frame vector
     is for tail latency (p99) reporting, where realtime audio cares
     about the worst frame, not the average."""
+    fcfg = resolve_config(config, {}, caller="rnn_serve_frames")
+    if warmup is None:
+        warmup = fcfg.frame_warmup
+    if collect_frame_times is None:
+        collect_frame_times = fcfg.collect_frame_times
     mesh = _resolve_mesh(mesh)
     rules = current_rules()
     if mesh is not None:

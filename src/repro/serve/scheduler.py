@@ -275,12 +275,20 @@ class Request:
     ``arrival`` is measured in decode steps: the request may not be
     admitted before the engine's clock reaches it (the mixed-length
     prompts-arriving-over-time workload).
+
+    ``deadline_us`` is optional SLO metadata (None: no deadline): the
+    wall-time budget from arrival to last token. The scheduler only
+    records it — :meth:`SlotScheduler.slo_report` (and through it
+    :func:`simulate_admission` / the serve router) converts the step
+    clock into microseconds under a per-step cost model and reports
+    attainment against it.
     """
 
     rid: int
     tokens: Any                       # (S,) or (S, K) prompt token ids
     max_new_tokens: int = 32
     arrival: int = 0
+    deadline_us: float | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -327,6 +335,9 @@ class SlotScheduler:
         self.page_stalls = 0          # admissions deferred for pages
         self.prefix_hits = 0          # admissions that matched the trie
         self.shared_pages = 0         # pages mapped shared across them
+        # per-request lifecycle in step time: arrival/admit/finish steps
+        # + the request's deadline — the raw material of slo_report()
+        self.req_log: dict[int, dict] = {}
 
     # -- submission / admission --------------------------------------------
     def submit(self, req: Request) -> None:
@@ -341,6 +352,8 @@ class SlotScheduler:
                 f"({self.pool.n_pages} pages, {self.pool.max_pages}/slot)")
         self._pending.append(req)
         self._pending.sort(key=lambda r: (r.arrival, r.rid))
+        self.req_log[req.rid] = {"arrival": req.arrival,
+                                 "deadline_us": req.deadline_us}
 
     def has_work(self) -> bool:
         return bool(self._pending) or any(
@@ -390,6 +403,7 @@ class SlotScheduler:
             self._pending.remove(req)
             self._slots[i] = _Slot(rid=req.rid, pos=req.prompt_len,
                                    remaining=req.max_new_tokens)
+            self.req_log[req.rid]["admit_step"] = self.now
             out.append((i, req))
             obs_trace.instant("serve/sched/admit",
                               args={"rid": req.rid, "slot": i,
@@ -472,6 +486,7 @@ class SlotScheduler:
     def _finish(self, slot: int) -> None:
         s = self._slots[slot]
         self.results[s.rid] = s.generated
+        self.req_log[s.rid]["finish_step"] = self.now
         self._slots[slot] = None
         if self.pool is not None:
             self.pool.release(slot)
@@ -483,6 +498,48 @@ class SlotScheduler:
         total = self.decode_steps * self.n_slots
         return self.active_slot_steps / total if total else 0.0
 
+    def slo_report(self, step_time_us: float) -> dict:
+        """Per-request TTFT/latency percentiles + SLO attainment under
+        a per-step cost model (``step_time_us`` per decode step — the
+        dryrun feeds its roofline step time here, tests feed 1.0).
+
+        Step accounting: the prefill that produces the first token runs
+        inside the admit step, so ``ttft = admit - arrival + 1`` steps
+        and ``latency = finish - arrival + 1`` (a prefill-only request
+        costs exactly one step). Attainment counts only requests that
+        carry a ``deadline_us`` (None when no request does).
+        """
+        ttft, lat, per_req = [], [], {}
+        met = deadlines = 0
+        for rid, log in sorted(self.req_log.items()):
+            if "admit_step" not in log or "finish_step" not in log:
+                continue                       # still pending/active
+            t = (log["admit_step"] - log["arrival"] + 1) * step_time_us
+            lt = (log["finish_step"] - log["arrival"] + 1) * step_time_us
+            ttft.append(t)
+            lat.append(lt)
+            ok = None
+            if log["deadline_us"] is not None:
+                deadlines += 1
+                ok = bool(lt <= log["deadline_us"])
+                met += ok
+            per_req[rid] = {"ttft_us": round(t, 3),
+                            "latency_us": round(lt, 3), "met": ok}
+
+        def pct(a, q):
+            return round(float(np.percentile(a, q)), 3) if a else 0.0
+
+        return {
+            "step_time_us": step_time_us,
+            "requests": len(lat),
+            "ttft_us": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
+            "latency_us": {"p50": pct(lat, 50), "p99": pct(lat, 99)},
+            "deadlines": deadlines,
+            "attainment": (round(met / deadlines, 4)
+                           if deadlines else None),
+            "per_request": per_req,
+        }
+
     def stats(self) -> dict:
         out = {
             "slots": self.n_slots,
@@ -493,6 +550,9 @@ class SlotScheduler:
             "idle_steps": self.idle_steps,
             "peak_active": self.peak_active,
             "occupancy": round(self.occupancy(), 4),
+            # the step clock when the last request finished — the
+            # makespan the router's load-aware projection minimizes
+            "final_step": self.now,
         }
         if self.pool is not None:
             out["page_stalls"] = self.page_stalls
@@ -504,16 +564,23 @@ class SlotScheduler:
 
 
 def simulate_admission(n_slots: int, requests: list[Request],
-                       pool=None) -> dict:
+                       pool=None, step_time_us: float | None = None
+                       ) -> dict:
     """Modelless replay of the admission policy: how well do ``n_slots``
     stay occupied for this trace? Used by launch/dryrun.py to record the
-    achieved occupancy a decode cell's slot count implies, and by tests
-    (no devices, no model — pure host bookkeeping).
+    achieved occupancy a decode cell's slot count implies, by the serve
+    router's load-aware placement, and by tests (no devices, no model —
+    pure host bookkeeping).
 
     With a ``pool`` (:class:`repro.serve.paging.PagePool`) the replay
     also drives page reservation/growth/release exactly as the engine
     would, so the returned stats carry page occupancy and internal
     fragmentation for the trace — the dryrun ``serve.paged`` record.
+
+    With ``step_time_us`` (a per-step cost model, e.g. the dryrun's
+    roofline step time) the stats gain a ``"slo"`` record: per-request
+    TTFT/latency percentiles and deadline attainment
+    (:meth:`SlotScheduler.slo_report`).
     """
     sched = SlotScheduler(n_slots, pool=pool)
     for r in requests:
@@ -542,7 +609,10 @@ def simulate_admission(n_slots: int, requests: list[Request],
         guard -= 1
         if guard < 0:  # pragma: no cover - scheduler invariant broken
             raise RuntimeError("simulate_admission did not terminate")
-    return sched.stats()
+    stats = sched.stats()
+    if step_time_us is not None:
+        stats["slo"] = sched.slo_report(step_time_us)
+    return stats
 
 
 __all__ = [

@@ -209,3 +209,27 @@ def test_injected_prefix_regression_fails_gate():
     _, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
     assert len(failures) == 1
     assert "serve/prefix/us_per_token" in failures[0]
+
+
+def test_injected_disagg_regression_fails_gate():
+    """Acceptance (ISSUE 9): serve/disagg/us_per_token is gated by the
+    same serve:/us_per pattern — an injected 1.5x regression trips it,
+    while the informational router SLO row (us_per_call=0) never gates
+    no matter how badly attainment collapses."""
+    base = _rec("serve", [
+        ("serve/disagg/us_per_token", 1000.0, 100.0),
+        ("serve/router/slo_attainment", 0.0,
+         "round_robin=1.0000(p99=500.0us)"),
+    ])
+    fresh = _rec("serve", [
+        ("serve/disagg/us_per_token", 1500.0, 66.0),        # 1.5x
+        ("serve/router/slo_attainment", 0.0,
+         "round_robin=0.1000(p99=9000.0us)"),               # collapse: ok
+    ])
+    _, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
+    assert len(failures) == 1
+    assert "serve/disagg/us_per_token" in failures[0]
+
+    ok = _rec("serve", [("serve/disagg/us_per_token", 1100.0, 91.0)])
+    _, failures = diff_records(ok, base, 0.25, {"serve"}, 50.0)
+    assert failures == []                                   # 1.1x passes

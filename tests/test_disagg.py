@@ -1,0 +1,235 @@
+"""Disaggregated prefill/decode tiers + multi-replica router.
+
+Acceptance (ISSUE 9): ``serve_disaggregated`` and a 2-replica
+``Router`` are token-for-token identical to single-engine
+``serve_continuous`` on the same skewed arrival trace — unsharded and
+on 1x8 / 2x4 host meshes (mesh cases need 8 devices; CI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``). The dryrun
+half holds ``simulate_replicas`` to reporting p50/p99 TTFT/latency and
+SLO attainment for every routing policy.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.models import ModelConfig
+from repro.models import init_params as lm_init
+from repro.serve import (
+    EngineConfig, Request, Router, route, serve_continuous,
+    serve_disaggregated, simulate_replicas,
+)
+from repro.serve.router import make_arrival_trace
+
+CFG = ModelConfig(name="tiny-disagg", mixer="attn", ffn="swiglu",
+                  n_layers=2, d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                  d_ff=64, vocab=50, dtype="float32", logit_chunk=16,
+                  remat=False)
+PAGED = EngineConfig(n_slots=2, paged=True, page_size=4)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _skewed_trace(seed=5, n=8):
+    """Mixed lengths + staggered arrivals: slot eviction/refill and the
+    handoff queue both get exercised."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(9, 14)) if i % 3 == 0 else \
+            int(rng.integers(4, 8))
+        reqs.append(Request(rid=i,
+                            tokens=rng.integers(0, 50, size=plen),
+                            max_new_tokens=int(rng.integers(3, 7)),
+                            arrival=(i // 2) * 3))
+    return reqs
+
+
+def _shared_trace(seed=7, n=6):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, 50, size=9)      # divergence mid-page
+    return [Request(rid=i,
+                    tokens=np.concatenate(
+                        [sys_p,
+                         rng.integers(0, 50,
+                                      size=int(rng.integers(1, 5)))]),
+                    max_new_tokens=4, arrival=(i // 3) * 2)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# disagg parity (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_disagg_matches_single_engine(params):
+    reqs = _skewed_trace()
+    single = serve_continuous(params, CFG, reqs, PAGED)
+    dis = serve_disaggregated(params, CFG, reqs, PAGED)
+    assert dis.tokens == single.tokens
+    assert dis.stats["disagg"] and dis.stats["paged"]
+    # one handoff per request; every surviving handoff mapped pages
+    assert dis.stats["handoffs"] == len(reqs)
+    assert dis.stats["handoff_pages"] > 0
+    assert dis.stats["prefill_tokens"] >= sum(
+        r.prompt_len for r in reqs)          # bucket padding counts
+
+
+def test_disagg_prefix_sharing_parity(params):
+    reqs = _shared_trace()
+    cfg = PAGED.replace(prefix_cache=True)
+    single = serve_continuous(params, CFG, reqs, cfg)
+    dis = serve_disaggregated(params, CFG, reqs, cfg)
+    assert dis.tokens == single.tokens
+    assert dis.stats["prefix_hits"] == single.stats["prefix_hits"] > 0
+    # partial prefill through the handoff really skipped shared tokens
+    off = serve_disaggregated(params, CFG, _shared_trace(), PAGED)
+    assert dis.stats["prefill_tokens"] < off.stats["prefill_tokens"]
+
+
+def test_disagg_nongreedy_parity_same_rng(params):
+    """Temperature > 0: both engines split the SAME rng in the same
+    order, so even sampled tokens agree."""
+    reqs = _skewed_trace(seed=9, n=5)
+    cfg = PAGED.replace(temperature=0.8)
+    key = jax.random.PRNGKey(42)
+    single = serve_continuous(params, CFG, reqs, cfg, rng=key)
+    dis = serve_disaggregated(params, CFG, reqs, cfg, rng=key)
+    assert dis.tokens == single.tokens
+
+
+@needs8
+@pytest.mark.parametrize("shape", [(1, 8), (2, 4)],
+                         ids=["mesh1x8", "mesh2x4"])
+def test_disagg_sharded_matches_unsharded(params, shape):
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(shape),
+                ("data", "model"))
+    reqs = _skewed_trace(seed=6, n=6)
+    ref = serve_disaggregated(params, CFG, reqs, PAGED)
+    res = serve_disaggregated(params, CFG, reqs, PAGED, mesh=mesh)
+    assert res.stats["sharded"]
+    assert res.tokens == ref.tokens
+
+
+def test_disagg_requires_paged(params):
+    with pytest.raises(ValueError, match="paged=True"):
+        serve_disaggregated(params, CFG, _skewed_trace(n=2),
+                            EngineConfig(n_slots=2))
+
+
+def test_disagg_empty_trace(params):
+    res = serve_disaggregated(params, CFG, [], PAGED)
+    assert res.tokens == {} and res.stats["handoffs"] == 0
+
+
+def test_disagg_finish_at_prefill(params):
+    """max_new_tokens=1 requests finish at the handoff boundary —
+    nothing is ever mapped into the decode pool for them."""
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, tokens=rng.integers(0, 50, size=5),
+                    max_new_tokens=1) for i in range(3)]
+    single = serve_continuous(params, CFG, reqs, PAGED)
+    dis = serve_disaggregated(params, CFG, reqs, PAGED)
+    assert dis.tokens == single.tokens
+    assert dis.stats["handoffs"] == 3 and dis.stats["handoff_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# router parity (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["continuous", "disagg"])
+def test_router_two_replicas_matches_single_engine(params, engine):
+    reqs = _skewed_trace()
+    single = serve_continuous(params, CFG, reqs, PAGED)
+    router = Router(2, PAGED, policy="least_loaded", engine=engine)
+    res = router.serve(params, CFG, reqs)
+    assert res.tokens == single.tokens       # every rid, every token
+    assert res.stats["replicas"] == 2
+    assert sum(res.stats["replica_requests"]) == len(reqs)
+    assert all(n > 0 for n in res.stats["replica_requests"])
+
+
+@needs8
+def test_router_parity_sharded_2x4(params):
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
+                ("data", "model"))
+    reqs = _skewed_trace(seed=11, n=6)
+    single = serve_continuous(params, CFG, reqs, PAGED, mesh=mesh)
+    res = Router(2, PAGED).serve(params, CFG, reqs, mesh=mesh)
+    assert res.tokens == single.tokens
+    assert all(s["sharded"] for s in res.stats["per_replica"])
+
+
+def test_route_policies_and_validation():
+    reqs = [Request(rid=i, tokens=np.zeros(4, np.int64),
+                    max_new_tokens=4, arrival=i) for i in range(6)]
+    rr = route(reqs, 3, policy="round_robin")
+    assert [len(a) for a in rr] == [2, 2, 2]
+    ll = route(reqs, 3, policy="least_loaded", n_slots=1)
+    assert sum(len(a) for a in ll) == 6
+    with pytest.raises(ValueError, match="policy"):
+        route(reqs, 2, policy="weighted")
+    with pytest.raises(ValueError, match="replica"):
+        route(reqs, 0)
+    with pytest.raises(ValueError, match="entries"):
+        route(reqs, 2, step_time_us=[1.0, 2.0, 3.0])
+
+
+def test_least_loaded_avoids_slow_replica():
+    """A 10x slower replica should receive (far) fewer requests."""
+    reqs = [Request(rid=i, tokens=np.zeros(4, np.int64),
+                    max_new_tokens=8, arrival=0) for i in range(8)]
+    out = route(reqs, 2, policy="least_loaded", n_slots=2,
+                step_time_us=[1.0, 10.0])
+    assert len(out[0]) > len(out[1])
+
+
+# ---------------------------------------------------------------------------
+# the trace-driven SLO dryrun
+# ---------------------------------------------------------------------------
+
+def test_request_deadline_default_none():
+    r = Request(rid=0, tokens=np.zeros(4, np.int64), max_new_tokens=2)
+    assert r.deadline_us is None
+
+
+def test_simulate_replicas_reports_both_policies():
+    trace = make_arrival_trace(np.random.default_rng(3), 20,
+                               mean_gap_steps=0.5, deadline_slack=2.0,
+                               step_time_us=2.0)
+    assert all(r.deadline_us is not None for r in trace)
+    for pol in ("round_robin", "least_loaded"):
+        s = simulate_replicas(trace, 2, policy=pol, n_slots=2,
+                              step_time_us=2.0)
+        assert s["policy"] == pol and s["requests"] == 20
+        assert s["ttft_us"]["p50"] <= s["ttft_us"]["p99"]
+        assert s["latency_us"]["p50"] <= s["latency_us"]["p99"]
+        assert s["deadlines"] == 20
+        assert 0.0 <= s["slo_attainment"] <= 1.0
+        assert len(s["per_replica"]) == 2
+
+
+def test_simulate_replicas_no_deadlines_attainment_none():
+    trace = make_arrival_trace(np.random.default_rng(4), 6)
+    s = simulate_replicas(trace, 2, n_slots=2)
+    assert s["slo_attainment"] is None and s["deadlines"] == 0
+    # latency percentiles still reported (TTFT >= 1 step always)
+    assert s["latency_us"]["p99"] >= s["ttft_us"]["p50"] > 0
+
+
+def test_heterogeneous_fleet_latency_scales():
+    """Same trace, one replica 5x slower: fleet p99 must exceed the
+    uniform-fast fleet's (the cost model actually reaches the SLO)."""
+    trace = make_arrival_trace(np.random.default_rng(5), 16,
+                               mean_gap_steps=0.25)
+    fast = simulate_replicas(trace, 2, n_slots=2, step_time_us=1.0)
+    mixed = simulate_replicas(trace, 2, n_slots=2,
+                              step_time_us=[1.0, 5.0])
+    assert mixed["latency_us"]["p99"] >= fast["latency_us"]["p99"]

@@ -235,7 +235,8 @@ def test_metrics_module_gate():
 # ---------------------------------------------------------------------------
 
 from repro.models import ModelConfig, init_params as lm_init  # noqa: E402
-from repro.serve import Request, serve_continuous             # noqa: E402
+from repro.serve import EngineConfig, Request, \
+    serve_continuous                                          # noqa: E402
 
 TINY = ModelConfig(name="tiny-obs", mixer="attn", ffn="swiglu", n_layers=2,
                    d_model=32, n_heads=4, n_kv=2, head_dim=16, d_ff=64,
@@ -253,7 +254,8 @@ def _reqs(n=4, seed=0):
 def test_serve_continuous_request_lifecycle(tmp_path):
     tr, reg = obs.enable_all()
     params = lm_init(jax.random.PRNGKey(0), TINY)
-    res = serve_continuous(params, TINY, _reqs(4), n_slots=2, cache_len=32)
+    res = serve_continuous(params, TINY, _reqs(4),
+                           EngineConfig(n_slots=2, cache_len=32))
     # satellite 1: compile vs steady-state throughput, both always on
     assert res.stats["compile_time_s"] >= 0.0
     assert "steady_tokens_per_sec" in res.stats
@@ -282,18 +284,20 @@ def test_serve_stats_keys_present_when_disabled():
     obs side effect — present with tracing off."""
     assert trace.get() is None and metrics.get() is None
     params = lm_init(jax.random.PRNGKey(0), TINY)
-    res = serve_continuous(params, TINY, _reqs(2), n_slots=2, cache_len=32)
+    res = serve_continuous(params, TINY, _reqs(2),
+                           EngineConfig(n_slots=2, cache_len=32))
     assert "compile_time_s" in res.stats
     assert "steady_tokens_per_sec" in res.stats
-    res0 = serve_continuous(params, TINY, [], n_slots=2)
+    res0 = serve_continuous(params, TINY, [], EngineConfig(n_slots=2))
     assert res0.stats["compile_time_s"] == 0.0
 
 
 def test_paged_serve_pool_gauges():
     _, reg = obs.enable_all()
     params = lm_init(jax.random.PRNGKey(0), TINY)
-    res = serve_continuous(params, TINY, _reqs(4, seed=1), n_slots=2,
-                           cache_len=32, paged=True, page_size=8)
+    res = serve_continuous(params, TINY, _reqs(4, seed=1),
+                           EngineConfig(n_slots=2, cache_len=32,
+                                        paged=True, page_size=8))
     g = reg.gauge("serve/pool/pages")
     assert g.last is not None and g.last >= 0
     # one pool sample per decode step: the timeline the stats can't give

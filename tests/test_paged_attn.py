@@ -30,7 +30,7 @@ from repro.models import (
 from repro.models import init_params as lm_init
 from repro.models import layers as L
 from repro.serve import (
-    PagePool, Request, ServeConfig, generate, serve_continuous,
+    EngineConfig, PagePool, Request, generate, serve_continuous,
 )
 
 needs8 = pytest.mark.skipif(
@@ -319,7 +319,7 @@ def _requests(prompts, max_new, arrivals=None):
 
 def _ref_tokens(params, cfg, prompt, n_new):
     out = generate(params, cfg, jnp.asarray(prompt)[None],
-                   ServeConfig(max_new_tokens=n_new))
+                   EngineConfig(max_new_tokens=n_new))
     return np.asarray(out)[0, len(prompt):]
 
 
@@ -330,8 +330,9 @@ def test_serve_kernel_matches_generate(cfg):
     prompts = [rng.integers(0, cfg.vocab, size=n) for n in (4, 8, 5)]
     max_new = [4, 6, 5]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 3])
-    res = serve_continuous(params, cfg, reqs, n_slots=2, paged=True,
-                           page_size=4, use_kernel=True)
+    res = serve_continuous(params, cfg, reqs,
+                           EngineConfig(n_slots=2, paged=True, page_size=4,
+                                        use_kernel=True))
     assert res.stats["paged"]
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
@@ -350,8 +351,9 @@ def test_serve_kernel_sharded_matches_unsharded(shape):
     prompts = [rng.integers(0, ATTN.vocab, size=n) for n in (5, 9, 6)]
     max_new = [5, 4, 6]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 2])
-    res = serve_continuous(params, ATTN, reqs, n_slots=2, mesh=mesh,
-                           paged=True, page_size=4, use_kernel=True)
+    res = serve_continuous(params, ATTN, reqs,
+                           EngineConfig(n_slots=2, paged=True, page_size=4,
+                                        use_kernel=True), mesh=mesh)
     assert res.stats["sharded"] and res.stats["paged"]
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
@@ -381,11 +383,12 @@ def test_serve_kernel_sharded_mla_matches_gather_path(shape):
     max_new = [5, 4, 6]
     ker = serve_continuous(params, MLA,
                            _requests(prompts, max_new, arrivals=[0, 0, 2]),
-                           n_slots=2, mesh=mesh, paged=True, page_size=4,
-                           use_kernel=True)
+                           EngineConfig(n_slots=2, paged=True, page_size=4,
+                                        use_kernel=True), mesh=mesh)
     ref = serve_continuous(params, MLA,
                            _requests(prompts, max_new, arrivals=[0, 0, 2]),
-                           n_slots=2, mesh=mesh, paged=True, page_size=4)
+                           EngineConfig(n_slots=2, paged=True,
+                                        page_size=4), mesh=mesh)
     assert ker.stats["sharded"] and ker.stats["paged"]
     for i in range(len(prompts)):
         np.testing.assert_array_equal(
@@ -415,7 +418,7 @@ def test_hybrid_sharded_decode_drift_2x4():
     params = lm_init(jax.random.PRNGKey(0), HYB)
     rng = np.random.default_rng(13)
     prompt = jnp.asarray(rng.integers(0, 50, size=7))[None]
-    scfg = ServeConfig(max_new_tokens=12)
+    scfg = EngineConfig(max_new_tokens=12)
     ref = np.asarray(generate(params, HYB, prompt, scfg))[0]
     shr = np.asarray(generate(params, HYB, prompt, scfg, mesh=mesh))[0]
     div = np.nonzero(ref != shr)[0]

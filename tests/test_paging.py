@@ -240,6 +240,112 @@ def run_prefix_trace(rng: np.random.Generator, n_slots: int,
     return sched.stats()
 
 
+# ---------------------------------------------------------------------------
+# disaggregated handoff trace driver (delayed accept, ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def run_handoff_trace(rng: np.random.Generator, n_slots: int,
+                      page_size: int, n_pages: int, max_pages: int,
+                      n_reqs: int, prefix: bool) -> dict:
+    """The disaggregated engine's event order: a whole admission batch
+    RESERVES decode-tier slots first (``reserve``/``try_reserve``
+    through the scheduler), then each slot's pages are mapped only when
+    its prefill handoff is accepted — ``cow_if_needed ->
+    ensure(prompt) -> register_prefix -> started`` as one event, in a
+    RANDOM order across the batch. Several slots sit reserved-but-
+    unmapped at once; refcount conservation must hold through that
+    window, which is exactly what ``DecodeTier.accept`` relies on.
+    (Under the prefix cache the engine admits one-at-a-time so each
+    trie registration is visible to the next match — mirrored here.)"""
+    if min(n_pages, max_pages) * page_size < 2:
+        page_size = 2       # smallest request (1 prompt + 1 new) must fit
+    pool = PagePool(page_size, n_pages, n_slots, max_pages,
+                    prefix_cache=prefix)
+    sched = SlotScheduler(n_slots, pool=pool)
+    cap_tokens = min(n_pages, max_pages) * page_size
+    if prefix:
+        reqs = _prefix_reqs(rng, n_reqs, cap_tokens)
+    else:
+        reqs = []
+        for i in range(n_reqs):
+            total = int(rng.integers(2, cap_tokens + 1))
+            plen = int(rng.integers(1, total))
+            reqs.append(Request(
+                rid=i, tokens=np.zeros(plen, np.int32),
+                max_new_tokens=total - plen,
+                arrival=int(rng.integers(0, 3 * n_reqs))))
+    for r in reqs:
+        sched.submit(r)
+    recon = _reconcile_prefix if prefix else _reconcile
+    recon(pool)
+
+    pending: list[tuple[int, Request]] = []   # handoff queue
+
+    def accept_one(idx: int = 0):
+        slot, req = pending.pop(idx)
+        if prefix:
+            info = pool.shared_info(slot)
+            assert info is not None
+            pair = pool.cow_if_needed(slot)
+            assert (pair is not None) == info.needs_cow
+            recon(pool)
+        pool.ensure(slot, req.prompt_len)
+        if prefix:
+            pool.register_prefix(slot,
+                                 np.asarray(req.tokens).reshape(-1))
+        recon(pool)
+        sched.started(slot, int(rng.integers(0, 100)))
+        recon(pool)
+
+    guard = sum(r.max_new_tokens + r.arrival for r in reqs) \
+        + 10 * len(reqs) + 10
+    while sched.has_work():
+        while True:
+            batch = sched.admit(limit=1)
+            if not batch:
+                break
+            pending.append(batch[0])
+            recon(pool)                 # reserved, nothing mapped yet
+            if prefix:
+                # the trie registration must be visible before the next
+                # admission matches against it (the engine admits
+                # one-at-a-time under the prefix cache)
+                accept_one()
+        # drain the whole handoff queue in random order before stepping
+        # (every slot in the batch sits reserved-but-unmapped until its
+        # own accept runs)
+        while pending:
+            accept_one(int(rng.integers(len(pending))))
+        active = sched.active_mask()
+        if not active.any():
+            sched.idle_tick()
+            guard -= 1
+            assert guard > 0, "handoff trace did not terminate (idle)"
+            continue
+        pos = sched.positions()
+        for i in np.flatnonzero(active):
+            pool.ensure(int(i), int(pos[i]) + 1)
+            recon(pool)
+        pool.tick()
+        sched.advance(rng.integers(0, 100, size=n_slots))
+        recon(pool)
+        guard -= 1
+        assert guard > 0, "handoff trace did not terminate"
+
+    assert not pending
+    assert pool.reserved_total() == 0
+    if prefix:
+        assert pool.allocated_total() == pool.trie_pages()
+        pool.drop_prefix_cache()
+        pool.check()
+    assert pool.allocated_total() == 0, "pages leaked past the handoff"
+    assert sorted(pool._free) == list(range(pool.n_pages))
+    assert len(sched.results) == len(reqs)
+    for r in reqs:
+        assert len(sched.results[r.rid]) == r.max_new_tokens
+    return sched.stats()
+
+
 @pytest.mark.parametrize("sweep", range(N_SWEEPS))
 def test_fuzz_random_traces(sweep):
     rng = np.random.default_rng(7919 * sweep + 13)
@@ -282,6 +388,49 @@ def test_fuzz_prefix_traces(sweep):
     # the generator builds shared prefixes on purpose — a sweep that
     # never hits the trie means the protocol under test went dead
     assert hits > 0
+
+
+@pytest.mark.parametrize("sweep", range(N_SWEEPS))
+@pytest.mark.parametrize("prefix", [False, True],
+                         ids=["plain", "prefix"])
+def test_fuzz_handoff_traces(sweep, prefix):
+    """240 traces x {plain, prefix} through the disaggregated handoff
+    protocol: batch reservation at admission, mapping delayed to
+    randomly-ordered accepts, check() after every event (refcount
+    conservation across the reserved-but-unmapped window)."""
+    rng = np.random.default_rng(15485863 * sweep + 41)
+    for _ in range(TRACES_PER_SWEEP):
+        n_slots = int(rng.integers(1, 6))
+        page_size = int(rng.integers(1, 9))
+        max_pages = int(rng.integers(1, 9))
+        n_pages = int(rng.integers(1, n_slots * max_pages + 2))
+        n_reqs = int(rng.integers(1, 13))
+        run_handoff_trace(rng, n_slots, page_size, n_pages,
+                          max_pages, n_reqs, prefix)
+
+
+def test_handoff_prefix_traces_actually_share():
+    """An ample pool + the shared-prefix generator must register trie
+    hits through the handoff protocol — a zero would mean the delayed
+    accept path stopped registering prompts."""
+    rng = np.random.default_rng(77)
+    hits = 0
+    for _ in range(8):
+        stats = run_handoff_trace(rng, n_slots=4, page_size=4,
+                                  n_pages=32, max_pages=8, n_reqs=10,
+                                  prefix=True)
+        hits += stats["prefix_hits"]
+    assert hits > 0
+
+
+def test_handoff_starved_pool_completes():
+    """Handoff protocol under heavy contention: delayed accepts on a
+    pool far below slots x max_pages still conserve every page."""
+    rng = np.random.default_rng(515151)
+    stats = run_handoff_trace(rng, n_slots=4, page_size=4, n_pages=3,
+                              max_pages=3, n_reqs=16, prefix=False)
+    assert stats["requests"] == 16
+    assert stats["paging"]["peak_pages"] <= 3
 
 
 def test_fuzz_prefix_starved_pool_recycles_trie():

@@ -6,7 +6,7 @@ import numpy as np
 from repro.cells import init_params, make_cell
 from repro.core import CSBSpec, csb_masks, csb_project, padded_csb_from_dense
 from repro.models import ModelConfig, init_params as lm_init
-from repro.serve import ServeConfig, generate, rnn_serve_frames
+from repro.serve import EngineConfig, generate, rnn_serve_frames
 
 CFG = ModelConfig(name="tiny", mixer="attn", ffn="swiglu", n_layers=2,
                   d_model=32, n_heads=2, n_kv=2, head_dim=16, d_ff=64,
@@ -16,8 +16,8 @@ CFG = ModelConfig(name="tiny", mixer="attn", ffn="swiglu", n_layers=2,
 def test_generate_greedy_deterministic():
     params = lm_init(jax.random.PRNGKey(0), CFG)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 50)
-    out1 = generate(params, CFG, prompt, ServeConfig(max_new_tokens=6))
-    out2 = generate(params, CFG, prompt, ServeConfig(max_new_tokens=6))
+    out1 = generate(params, CFG, prompt, EngineConfig(max_new_tokens=6))
+    out2 = generate(params, CFG, prompt, EngineConfig(max_new_tokens=6))
     assert out1.shape == (2, 14)
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
     assert int(out1.max()) < 50
@@ -30,7 +30,7 @@ def test_generate_matches_teacher_forcing():
     params = lm_init(jax.random.PRNGKey(3), CFG)
     prompt = jax.random.randint(jax.random.PRNGKey(4), (1, 6), 0, 50)
     out = np.asarray(generate(params, CFG, prompt,
-                              ServeConfig(max_new_tokens=4)))
+                              EngineConfig(max_new_tokens=4)))
     seq = prompt
     for i in range(4):
         logits, _ = prefill(params, {"tokens": jnp.asarray(seq)}, CFG)

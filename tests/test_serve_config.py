@@ -1,0 +1,150 @@
+"""EngineConfig: validation, the legacy-kwarg shim, the ServeConfig shim.
+
+The unified config is the API surface every serve entry point consumes,
+so this file holds the contract: every cross-field rule fails at
+construction; every old loose kwarg still works for one release but
+warns and lands on the SAME engine behavior (token-for-token); unknown
+kwargs raise TypeError like any real signature would.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models import init_params as lm_init
+from repro.serve import (
+    EngineConfig, Request, ServeConfig, generate, serve_continuous,
+)
+from repro.serve.config import resolve_config
+
+CFG = ModelConfig(name="tiny-cfg", mixer="attn", ffn="swiglu", n_layers=2,
+                  d_model=32, n_heads=2, n_kv=2, head_dim=16, d_ff=64,
+                  vocab=50, dtype="float32", logit_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _requests(n=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, 50, size=int(
+                        rng.integers(4, 10))),
+                    max_new_tokens=int(rng.integers(3, 7)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(max_new_tokens=0), "max_new_tokens"),
+    (dict(temperature=-0.5), "temperature"),
+    (dict(cache_len=0), "cache_len"),
+    (dict(n_slots=0), "n_slots"),
+    (dict(page_size=0), "page_size"),
+    (dict(frame_warmup=-1), "frame_warmup"),
+    (dict(use_kernel=True), "use_kernel=True requires paged=True"),
+    (dict(prefix_cache=True), "prefix_cache=True requires paged=True"),
+    (dict(pool_pages=8), "pool_pages requires paged=True"),
+    (dict(paged=True, pool_pages=0), "pool_pages"),
+])
+def test_invalid_configs_raise(kw, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kw)
+
+
+def test_valid_paged_combination():
+    c = EngineConfig(paged=True, page_size=8, pool_pages=4,
+                     prefix_cache=True, use_kernel=True)
+    assert c.paged and c.prefix_cache and c.use_kernel
+
+
+def test_replace_revalidates_and_returns_base():
+    c = EngineConfig(n_slots=2)
+    c2 = c.replace(paged=True, page_size=8)
+    assert type(c2) is EngineConfig and c2.paged and c2.n_slots == 2
+    assert not c.paged                       # frozen original untouched
+    with pytest.raises(ValueError, match="prefix_cache"):
+        c.replace(prefix_cache=True)         # still not paged
+
+
+def test_config_is_frozen_and_hashable():
+    c = EngineConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.n_slots = 8
+    assert hash(c) == hash(EngineConfig())
+
+
+# ---------------------------------------------------------------------------
+# resolve_config: the one-release loose-kwarg shim
+# ---------------------------------------------------------------------------
+
+def test_resolve_legacy_kwargs_warn_and_override():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        c = resolve_config(None, {"n_slots": 2, "paged": True,
+                                  "page_size": 8}, caller="t")
+    assert (c.n_slots, c.paged, c.page_size) == (2, True, 8)
+    # legacy kwargs override an explicit config field-by-field
+    with pytest.warns(DeprecationWarning):
+        c2 = resolve_config(EngineConfig(n_slots=4, max_new_tokens=7),
+                            {"n_slots": 2}, caller="t")
+    assert c2.n_slots == 2 and c2.max_new_tokens == 7
+
+
+def test_resolve_unknown_kwarg_raises_typeerror():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        resolve_config(None, {"slots": 2}, caller="serve_continuous")
+
+
+def test_resolve_legacy_combination_still_validated():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="prefix_cache"):
+            resolve_config(None, {"prefix_cache": True}, caller="t")
+
+
+def test_resolve_no_legacy_no_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_config(None, {}, caller="t") == EngineConfig()
+        c = EngineConfig(n_slots=2)
+        assert resolve_config(c, {}, caller="t") is c
+
+
+# ---------------------------------------------------------------------------
+# behavior parity through the shims (the one-release guarantee)
+# ---------------------------------------------------------------------------
+
+def test_legacy_serve_kwargs_behave_identically(params):
+    reqs = _requests()
+    new = serve_continuous(params, CFG, reqs,
+                           EngineConfig(n_slots=2, paged=True,
+                                        page_size=4))
+    with pytest.warns(DeprecationWarning, match="serve_continuous"):
+        old = serve_continuous(params, CFG, _requests(), n_slots=2,
+                               paged=True, page_size=4)
+    assert old.tokens == new.tokens
+    assert old.stats["paged"] and old.stats["requests"] == len(reqs)
+
+
+def test_serveconfig_shim_warns_and_generates(params):
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 50)
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        scfg = ServeConfig(max_new_tokens=4)
+    assert isinstance(scfg, EngineConfig)
+    ref = generate(params, CFG, prompt, EngineConfig(max_new_tokens=4))
+    out = generate(params, CFG, prompt, scfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_new_style_emits_no_deprecation(params):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        serve_continuous(params, CFG, _requests(2),
+                         EngineConfig(n_slots=2))

@@ -21,7 +21,7 @@ from repro.models import (
 )
 from repro.models import init_params as lm_init
 from repro.serve import (
-    PagePool, Request, ServeConfig, bucket_len, generate, pages_for,
+    EngineConfig, PagePool, Request, bucket_len, generate, pages_for,
     serve_continuous,
 )
 from repro.serve import engine as serve_engine
@@ -50,7 +50,7 @@ def _requests(prompts, max_new, arrivals=None):
 
 def _ref_tokens(params, prompt, n_new):
     out = generate(params, CFG, jnp.asarray(prompt)[None],
-                   ServeConfig(max_new_tokens=n_new))
+                   EngineConfig(max_new_tokens=n_new))
     return np.asarray(out)[0, len(prompt):]
 
 
@@ -63,8 +63,9 @@ def test_paged_matches_generate_mixed_lengths(params):
     prompts = [rng.integers(0, 50, size=n) for n in (4, 8, 5, 7, 6)]
     max_new = [4, 6, 5, 4, 6]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 3, 6, 6])
-    res = serve_continuous(params, CFG, reqs, n_slots=2, paged=True,
-                           page_size=4)
+    res = serve_continuous(params, CFG, reqs,
+                           EngineConfig(n_slots=2, paged=True,
+                                        page_size=4))
     assert res.stats["paged"] and res.stats["bucketed_prefill"]
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
@@ -82,7 +83,8 @@ def test_paged_evict_refill_single_slot_no_leak(params):
     p0 = rng.integers(0, 50, size=9)
     p1 = rng.integers(0, 50, size=4)
     res = serve_continuous(params, CFG, _requests([p0, p1], [5, 6]),
-                           n_slots=1, paged=True, page_size=4)
+                           EngineConfig(n_slots=1, paged=True,
+                                        page_size=4))
     np.testing.assert_array_equal(res.tokens[0], _ref_tokens(params, p0, 5))
     np.testing.assert_array_equal(res.tokens[1], _ref_tokens(params, p1, 6))
 
@@ -99,8 +101,9 @@ def test_paged_sharded_matches_unsharded(params, shape):
     prompts = [rng.integers(0, 50, size=n) for n in (5, 9, 6, 7)]
     max_new = [5, 4, 6, 5]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 2, 4])
-    res = serve_continuous(params, CFG, reqs, n_slots=2, mesh=mesh,
-                           paged=True, page_size=4)
+    res = serve_continuous(params, CFG, reqs,
+                           EngineConfig(n_slots=2, paged=True,
+                                        page_size=4), mesh=mesh)
     assert res.stats["sharded"] and res.stats["paged"]
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
@@ -154,12 +157,15 @@ def test_paged_outadmits_contiguous_on_same_budget(params):
     assert budget_tokens == 2 * cache_len == 10 * psz
 
     reqs = _requests(prompts, max_new)
-    paged = serve_continuous(params, CFG, reqs, n_slots=4, paged=True,
-                             page_size=psz, cache_len=cache_len,
-                             pool_pages=budget_tokens // psz)
-    contig = serve_continuous(params, CFG, _requests(prompts, max_new),
-                              n_slots=budget_tokens // cache_len,
-                              cache_len=cache_len)
+    paged = serve_continuous(
+        params, CFG, reqs,
+        EngineConfig(n_slots=4, paged=True, page_size=psz,
+                     cache_len=cache_len,
+                     pool_pages=budget_tokens // psz))
+    contig = serve_continuous(
+        params, CFG, _requests(prompts, max_new),
+        EngineConfig(n_slots=budget_tokens // cache_len,
+                     cache_len=cache_len))
     for i, p in enumerate(prompts):
         ref = _ref_tokens(params, p, max_new[i])
         np.testing.assert_array_equal(paged.tokens[i], ref)
@@ -194,8 +200,9 @@ def test_prefill_bucketing_bounds_recompiles():
     rng = np.random.default_rng(7)
     reqs = _requests([rng.integers(0, 50, size=n) for n in lens],
                      [2] * len(lens))
-    res = serve_continuous(params, cfg, reqs, n_slots=4, paged=True,
-                           page_size=8)
+    res = serve_continuous(params, cfg, reqs,
+                           EngineConfig(n_slots=4, paged=True,
+                                        page_size=8))
     assert res.stats["requests"] == 32
     jt = serve_engine._jitted(cfg, None)
     compiled = jt["prefill"]._cache_size()
@@ -213,11 +220,12 @@ def test_bucket_padding_never_changes_tokens(params):
     prompts = [rng.integers(0, 50, size=n) for n in (3, 9, 13, 6)]
     max_new = [5, 4, 3, 6]
     on = serve_continuous(params, CFG, _requests(prompts, max_new),
-                          n_slots=2, paged=True, page_size=4,
-                          bucket_prompts=True)
+                          EngineConfig(n_slots=2, paged=True, page_size=4,
+                                       bucket_prompts=True))
     off = serve_continuous(params, CFG, _requests(prompts, max_new),
-                           n_slots=2, paged=True, page_size=4,
-                           bucket_prompts=False)
+                           EngineConfig(n_slots=2, paged=True,
+                                        page_size=4,
+                                        bucket_prompts=False))
     assert on.stats["bucketed_prefill"] and not off.stats[
         "bucketed_prefill"]
     assert on.tokens == off.tokens
@@ -229,20 +237,22 @@ def test_bucket_padding_never_changes_tokens(params):
 def test_paged_rejects_oversized_request(params):
     reqs = _requests([np.zeros(6, np.int64)], [8])
     with pytest.raises(ValueError):
-        serve_continuous(params, CFG, reqs, n_slots=1, cache_len=10,
-                         paged=True)
+        serve_continuous(params, CFG, reqs,
+                         EngineConfig(n_slots=1, cache_len=10,
+                                      paged=True))
     # fits cache_len but not the (smaller) pool
     with pytest.raises(ValueError):
         serve_continuous(params, CFG, _requests([np.zeros(6, np.int64)],
                                                 [8]),
-                         n_slots=2, cache_len=16, paged=True, page_size=4,
-                         pool_pages=2)
+                         EngineConfig(n_slots=2, cache_len=16, paged=True,
+                                      page_size=4, pool_pages=2))
 
 
 def test_pages_for_consistency_with_engine(params):
     """Page accounting in stats matches pages_for arithmetic."""
     reqs = _requests([np.arange(5) % 50], [3])
-    res = serve_continuous(params, CFG, reqs, n_slots=1, paged=True,
-                           page_size=4)
+    res = serve_continuous(params, CFG, reqs,
+                           EngineConfig(n_slots=1, paged=True,
+                                        page_size=4))
     # one request: peak pages == pages for its deepest position
     assert res.stats["paging"]["peak_pages"] == pages_for(5 + 3, 4)

@@ -23,7 +23,7 @@ from jax.sharding import Mesh
 from repro.models import ModelConfig
 from repro.models import init_params as lm_init
 from repro.serve import (
-    PagePool, Request, ServeConfig, generate, pages_for, serve_continuous,
+    EngineConfig, PagePool, Request, generate, pages_for, serve_continuous,
 )
 
 CFG_ATTN = ModelConfig(name="tiny-prefix", mixer="attn", ffn="swiglu",
@@ -63,8 +63,9 @@ def _shared_trace(seed=7, sys_len=9, n=6, vocab=50):
 
 
 def _run(params, cfg, reqs, *, prefix, mesh=None):
-    return serve_continuous(params, cfg, reqs, n_slots=2, paged=True,
-                            page_size=4, prefix_cache=prefix, mesh=mesh)
+    return serve_continuous(params, cfg, reqs,
+                            EngineConfig(n_slots=2, paged=True, page_size=4,
+                                         prefix_cache=prefix), mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -82,7 +83,7 @@ def test_prefix_on_matches_off_and_generate(params_by_mixer, mixer):
     # the scalar-pos reference: generate() decodes with a scalar position
     for r in reqs:
         ref = generate(params, cfg, jnp.asarray(r.tokens)[None],
-                       ServeConfig(max_new_tokens=r.max_new_tokens))
+                       EngineConfig(max_new_tokens=r.max_new_tokens))
         np.testing.assert_array_equal(
             on.tokens[r.rid], np.asarray(ref)[0, len(r.tokens):],
             err_msg=f"request {r.rid}")
@@ -106,12 +107,12 @@ def test_prefix_sharing_actually_shares(params_by_mixer, mixer):
 def test_prefix_off_by_default_and_requires_paged(params_by_mixer):
     params = params_by_mixer["attn"]
     reqs = _shared_trace(n=2)
-    res = serve_continuous(params, CFG_ATTN, reqs, n_slots=2, paged=True,
-                           page_size=4)
+    res = serve_continuous(params, CFG_ATTN, reqs,
+                           EngineConfig(n_slots=2, paged=True, page_size=4))
     assert not res.stats["prefix_cache"]
     with pytest.raises(ValueError, match="prefix_cache"):
-        serve_continuous(params, CFG_ATTN, reqs, n_slots=2,
-                         prefix_cache=True)
+        serve_continuous(params, CFG_ATTN, reqs,
+                         EngineConfig(n_slots=2, prefix_cache=True))
 
 
 @needs8

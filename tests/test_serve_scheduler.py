@@ -13,7 +13,7 @@ from jax.sharding import Mesh
 from repro.models import ModelConfig, decode_step, init_cache
 from repro.models import init_params as lm_init
 from repro.serve import (
-    Request, ServeConfig, SlotScheduler, cache_len_of, generate,
+    EngineConfig, Request, SlotScheduler, cache_len_of, generate,
     grow_cache, serve_continuous, simulate_admission,
 )
 
@@ -41,7 +41,7 @@ def _requests(prompts, max_new, arrivals=None):
 def _ref_tokens(params, prompt, n_new):
     """Generated tail of a solo fixed-batch greedy run."""
     out = generate(params, CFG, jnp.asarray(prompt)[None],
-                   ServeConfig(max_new_tokens=n_new))
+                   EngineConfig(max_new_tokens=n_new))
     return np.asarray(out)[0, len(prompt):]
 
 
@@ -157,7 +157,7 @@ def test_evict_refill_single_slot_no_leak(params):
     p0 = rng.integers(0, 50, size=9)
     p1 = rng.integers(0, 50, size=4)
     res = serve_continuous(params, CFG, _requests([p0, p1], [5, 6]),
-                           n_slots=1)
+                           EngineConfig(n_slots=1))
     assert res.stats["requests"] == 2
     np.testing.assert_array_equal(res.tokens[0], _ref_tokens(params, p0, 5))
     np.testing.assert_array_equal(res.tokens[1], _ref_tokens(params, p1, 6))
@@ -169,9 +169,10 @@ def test_continuous_matches_generate_batch(params):
     prompts = np.asarray(
         jax.random.randint(jax.random.PRNGKey(4), (3, 6), 0, 50))
     ref = np.asarray(generate(params, CFG, jnp.asarray(prompts),
-                              ServeConfig(max_new_tokens=5)))[:, 6:]
+                              EngineConfig(max_new_tokens=5)))[:, 6:]
     res = serve_continuous(
-        params, CFG, _requests(list(prompts), [5, 5, 5]), n_slots=3)
+        params, CFG, _requests(list(prompts), [5, 5, 5]),
+        EngineConfig(n_slots=3))
     for i in range(3):
         np.testing.assert_array_equal(res.tokens[i], ref[i])
     assert res.stats["occupancy"] == 1.0
@@ -182,7 +183,7 @@ def test_continuous_mixed_lengths_and_arrivals(params):
     prompts = [rng.integers(0, 50, size=n) for n in (4, 8, 5, 7, 6)]
     max_new = [4, 6, 5, 4, 6]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 3, 6, 6])
-    res = serve_continuous(params, CFG, reqs, n_slots=2)
+    res = serve_continuous(params, CFG, reqs, EngineConfig(n_slots=2))
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
             res.tokens[i], _ref_tokens(params, p, max_new[i]),
@@ -194,7 +195,8 @@ def test_continuous_mixed_lengths_and_arrivals(params):
 def test_continuous_rejects_undersized_cache(params):
     reqs = _requests([np.zeros(6, np.int64)], [8])
     with pytest.raises(ValueError):
-        serve_continuous(params, CFG, reqs, n_slots=1, cache_len=10)
+        serve_continuous(params, CFG, reqs,
+                         EngineConfig(n_slots=1, cache_len=10))
 
 
 # ---------------------------------------------------------------------------
@@ -213,7 +215,8 @@ def test_continuous_sharded_matches_unsharded(params, shape):
     prompts = [rng.integers(0, 50, size=n) for n in (5, 9, 6, 7)]
     max_new = [5, 4, 6, 5]
     reqs = _requests(prompts, max_new, arrivals=[0, 0, 2, 4])
-    res = serve_continuous(params, CFG, reqs, n_slots=2, mesh=mesh)
+    res = serve_continuous(params, CFG, reqs, EngineConfig(n_slots=2),
+                           mesh=mesh)
     assert res.stats["sharded"]
     for i, p in enumerate(prompts):
         np.testing.assert_array_equal(
@@ -260,7 +263,7 @@ def test_generate_sharded_matches_unsharded(params):
     mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
                 ("data", "model"))
     prompt = jax.random.randint(jax.random.PRNGKey(7), (4, 6), 0, 50)
-    scfg = ServeConfig(max_new_tokens=5)
+    scfg = EngineConfig(max_new_tokens=5)
     ref = generate(params, CFG, prompt, scfg)
     out = generate(params, CFG, prompt, scfg, mesh=mesh)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -39,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelConfig, init_params
-from repro.serve import Request, ServeConfig, generate, serve_continuous
+from repro.serve import (EngineConfig, Request, generate, serve_continuous,
+                         serve_disaggregated)
 
 cfg = ModelConfig(name="docs", mixer="attn", ffn="swiglu", n_layers=2,
                   d_model=32, n_heads=2, n_kv=2, head_dim=16, d_ff=64,
