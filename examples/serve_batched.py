@@ -1,6 +1,6 @@
 """End-to-end serving driver (the paper's workload shape: inference).
 
-Six parts:
+Seven parts:
 1. Continuous batching: mixed-length prompts arriving over time flow
    through a fixed set of decode slots — finished requests are evicted
    and the next queued prompt prefilled into the freed slot mid-decode.
@@ -23,6 +23,12 @@ Six parts:
    directly — zero prefill compute for the shared span, copy-on-write
    at the divergence page. Hit count, prefill-token reduction and
    token-for-token parity with the non-shared engine are asserted.
+3b. Speculative decoding: the part-1 trace re-runs with
+   speculative=True — a CSB-pruned copy of the target (the paper's own
+   compression scheme as the draft model) proposes spec_k tokens per
+   round and the target verifies them in one multi-position paged
+   decode step. Greedy trace, so token-for-token parity with part 1 is
+   asserted; acceptance counters are printed.
 4. Fixed-batch LM serving: prefill a batch of prompts and greedily
    decode through the jitted single-token step.
 5. Faster-than-realtime RNN frame serving: an LSTM with CSB-compressed
@@ -150,6 +156,20 @@ print(f"\nshared {len(sys_prompt)}-token system prompt x "
 print(f"  prefill compute: {base.stats['prefill_tokens']} tokens without "
       f"sharing -> {shared.stats['prefill_tokens']} with "
       f"({saved} saved) — identical outputs")
+
+# -- 3b. speculative decoding: CSB-pruned self-draft + k-token verify ------
+spec_cfg = paged_cfg.replace(speculative=True, spec_k=4,
+                             draft_prune_rate=0.5)
+spec = serve_continuous(params, cfg, requests, spec_cfg, mesh=mesh)
+assert spec.tokens == res.tokens, \
+    "speculative decoding must not change a single output token at T=0"
+sp = spec.stats["speculative"]
+print(f"\nspeculative decode (k={sp['spec_k']}, draft = target CSB-pruned "
+      f"at {sp['draft_prune_rate']:.0%}): {sp['rounds']} verify rounds, "
+      f"{sp['proposed']} drafted, {sp['accepted']} accepted "
+      f"(acceptance {sp['acceptance_rate']:.0%}), "
+      f"{spec.stats['generated_tokens'] / max(sp['rounds'], 1):.2f} "
+      f"tokens per target step — identical outputs")
 
 # -- 4. fixed-batch LM serving ---------------------------------------------
 prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)

@@ -145,6 +145,11 @@ def activation_rules(cfg, mesh, policy: ShardingPolicy, *,
         "mla_pages": P(dp, None, None),           # (N, P, kv_lora)
         "attn_q": P(dp, None, "model", None),     # (B, S, H, D)
         "attn_kv": P(dp, None, "model", None),    # (B, S, KV, D)
+        # SSD block streams (B, S, C): batch-parallel only. The tag is
+        # load-bearing — see layers.ssd_block_apply (call sites use
+        # fallback="replicate" so an unsplittable batch pins the whole
+        # chunked scan replicated instead of letting GSPMD guess)
+        "ssd_inner": P(dp, None, None),
         "moe_groups": P(dp, None, None),          # (G, C, d)
         "moe_dispatch": P(dp, None, "model", None),  # (G, C, E, cap)
         "moe_experts": P(dp, "model", None, None),   # (G, E, cap, d)

@@ -316,10 +316,26 @@ def _cache_write(buf, new, pos):
     )(buf, new, pos)
 
 
+def _decode_mask(t: int, row_pos, s: int, window):
+    """Per-query causal decode mask, (1|B, S, T): query i (absolute
+    position ``row_pos + i``) sees keys at ``kpos <= row_pos + i``. For
+    s == 1 this is the classic single-token decode mask; s > 1 is the
+    speculative verify step, where later draft positions may attend
+    earlier drafts written this same step but never the reverse."""
+    kpos = jnp.arange(t)
+    qp = row_pos[:, None] + jnp.arange(s)             # (1|B, S)
+    mask = kpos[None, None, :] <= qp[:, :, None]      # (1|B, S, T)
+    if window is not None:
+        mask &= kpos[None, None, :] > qp[:, :, None] - window
+    return mask
+
+
 def attn_decode(p, x, cfg: ModelConfig, cache, pos):
-    """One-token decode. cache: {k:(B,T,KV,D), v:...}; pos: scalar or
-    (B,) per-sequence positions (continuous batching)."""
-    b, s, _ = x.shape  # s == 1
+    """Decode step. cache: {k:(B,T,KV,D), v:...}; pos: scalar or (B,)
+    per-sequence positions (continuous batching). x may carry s > 1
+    tokens (speculative verification): token i lands at ``pos + i`` and
+    attends causally through the batch it rides in."""
+    b, s, _ = x.shape
     qpos, row_pos = _decode_pos(pos, s)
     q, k, v = attn_qkv(p, x, cfg, qpos)
     ck = _cache_write(cache["k"], k, pos)
@@ -331,16 +347,19 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
     sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh.astype(ck.dtype), ck,
                     preferred_element_type=F32)
     sc = sc / math.sqrt(cfg.hd)
-    kpos = jnp.arange(t)
-    mask = kpos[None, :] <= row_pos[:, None]          # (1|B, T)
-    if cfg.window is not None:
-        mask &= kpos[None, :] > row_pos[:, None] - cfg.window
-    sc = jnp.where(mask[:, None, None, None, :], sc, -1e30)
+    mask = _decode_mask(t, row_pos, s, cfg.window)     # (1|B, S, T)
+    sc = jnp.where(mask[:, None, None, :, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", pattn.astype(cv.dtype), cv,
                    preferred_element_type=F32)
-    o = o.reshape(b, s, -1).astype(x.dtype)
-    return dense(o, p["wo"]), {"k": ck, "v": cv}
+    # pin before the row-parallel out-proj: wo's input-dim sharding
+    # otherwise propagates backward through the softmax/einsum chain
+    # inside the decode layer scan — involuntary-remat miscompile on
+    # the CPU SPMD backend (see dist.api.shard), observed as O(1)
+    # logit drift whenever the head count cannot split the model axis
+    o = shard(o.reshape(b, s, -1).astype(x.dtype), "residual",
+              fallback="replicate")
+    return dense(o, p["wo"]),{"k": ck, "v": cv}
 
 
 def attn_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
@@ -365,14 +384,16 @@ def paged_write(pool: jax.Array, new: jax.Array, pos,
     Rows whose position is not mapped (inactive slots) carry the scratch
     page in ``page_table`` (serve.paging.PagePool.device_table), so the
     scatter needs no mask; live slots own disjoint pages by allocator
-    invariant, so writes never collide.
+    invariant, so writes never collide. ``new`` may carry s > 1 tokens
+    (speculative verification): token i scatters to position ``pos + i``.
     """
-    b = new.shape[0]
+    b, s = new.shape[0], new.shape[1]
     psz = pool.shape[1]
     posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = posv[:, None] + jnp.arange(s)               # (B, S)
     logical = jnp.clip(posv // psz, 0, page_table.shape[1] - 1)
-    page = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
-    return pool.at[page, posv % psz].set(new[:, 0].astype(pool.dtype))
+    page = jnp.take_along_axis(page_table, logical, axis=1)
+    return pool.at[page, posv % psz].set(new.astype(pool.dtype))
 
 
 def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
@@ -397,13 +418,14 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
     ``use_kernel=True`` routes the attention through the Pallas
     paged-attention kernel (``kernels.paged_attn``), which walks the
     page table in-kernel instead of materializing the (B, max_pages*P)
-    gather; tokens match the gather path."""
-    b, s, _ = x.shape  # s == 1
+    gather; tokens match the gather path. The kernel path is single-query
+    (s == 1); multi-token verify steps take the gather path."""
+    b, s, _ = x.shape
     qpos, row_pos = _decode_pos(pos, s)
     q, k, v = attn_qkv(p, x, cfg, qpos)
     ck = paged_write(cache["k"], k, pos, page_table)
     cv = paged_write(cache["v"], v, pos, page_table)
-    if use_kernel:
+    if use_kernel and s == 1:
         from repro.kernels.paged_attn import paged_attn_decode
         # replicated(...): the kernel's grid loop must stay off GSPMD's
         # guessed layouts (see dist.api.replicated) — pools are small
@@ -425,16 +447,19 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
     sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh.astype(kg.dtype), kg,
                     preferred_element_type=F32)
     sc = sc / math.sqrt(cfg.hd)
-    kpos = jnp.arange(t)
-    mask = kpos[None, :] <= row_pos[:, None]          # (1|B, T)
-    if cfg.window is not None:
-        mask &= kpos[None, :] > row_pos[:, None] - cfg.window
-    sc = jnp.where(mask[:, None, None, None, :], sc, -1e30)
+    mask = _decode_mask(t, row_pos, s, cfg.window)     # (1|B, S, T)
+    sc = jnp.where(mask[:, None, None, :, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bgrqk,bkgd->bqgrd", pattn.astype(vg.dtype), vg,
                    preferred_element_type=F32)
-    o = o.reshape(b, s, -1).astype(x.dtype)
-    return dense(o, p["wo"]), {"k": ck, "v": cv}
+    # pin before the row-parallel out-proj: wo's input-dim sharding
+    # otherwise propagates backward through the softmax/einsum chain
+    # inside the decode layer scan — involuntary-remat miscompile on
+    # the CPU SPMD backend (see dist.api.shard), observed as O(1)
+    # logit drift whenever the head count cannot split the model axis
+    o = shard(o.reshape(b, s, -1).astype(x.dtype), "residual",
+              fallback="replicate")
+    return dense(o, p["wo"]),{"k": ck, "v": cv}
 
 
 def attn_paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int,
@@ -520,16 +545,22 @@ def mla_decode(p, x, cfg: ModelConfig, cache, pos):
     s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(cr.dtype), cr,
                      preferred_element_type=F32)
     sc = (s_c + s_r) / math.sqrt(hd + rd)
-    mask = jnp.arange(t)[None, :] <= row_pos[:, None]  # (1|B, T)
-    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    mask = _decode_mask(t, row_pos, s, None)           # (1|B, S, T)
+    sc = jnp.where(mask[:, None, :, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o_c = jnp.einsum("bhqk,bkl->bqhl", pattn.astype(cc.dtype), cc,
-                     preferred_element_type=F32)          # (B,1,H,kvl)
+                     preferred_element_type=F32)          # (B,s,H,kvl)
     wvb = p["wv_b"].reshape(cfg.kv_lora, nh, hd)
     o = jnp.einsum("bqhl,lhd->bqhd", o_c.astype(wvb.dtype), wvb,
                    preferred_element_type=F32)
-    o = o.reshape(b, s, -1).astype(x.dtype)
-    return dense(o, p["wo"]), {"c_kv": cc, "k_rope": cr}
+    # pin before the row-parallel out-proj: wo's input-dim sharding
+    # otherwise propagates backward through the softmax/einsum chain
+    # inside the decode layer scan — involuntary-remat miscompile on
+    # the CPU SPMD backend (see dist.api.shard), observed as O(1)
+    # logit drift whenever the head count cannot split the model axis
+    o = shard(o.reshape(b, s, -1).astype(x.dtype), "residual",
+              fallback="replicate")
+    return dense(o, p["wo"]),{"c_kv": cc, "k_rope": cr}
 
 
 def mla_cache_init(cfg: ModelConfig, batch: int, t: int, dtype) -> PyTree:
@@ -554,7 +585,7 @@ def mla_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, qpos)
     cc_pool = paged_write(cache["c_kv"], c_kv, pos, page_table)
     cr_pool = paged_write(cache["k_rope"], k_rope[:, :, 0], pos, page_table)
-    if use_kernel:
+    if use_kernel and s == 1:
         from repro.kernels.paged_attn import paged_attn_decode
         wkb = p["wk_b"].reshape(cfg.kv_lora, nh, hd)
         q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(wkb.dtype), wkb,
@@ -583,16 +614,22 @@ def mla_decode_paged(p, x, cfg: ModelConfig, cache, pos, page_table,
     s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(cr.dtype), cr,
                      preferred_element_type=F32)
     sc = (s_c + s_r) / math.sqrt(hd + rd)
-    mask = jnp.arange(t)[None, :] <= row_pos[:, None]  # (1|B, T)
-    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    mask = _decode_mask(t, row_pos, s, None)           # (1|B, S, T)
+    sc = jnp.where(mask[:, None, :, :], sc, -1e30)
     pattn = jax.nn.softmax(sc, axis=-1)
     o_c = jnp.einsum("bhqk,bkl->bqhl", pattn.astype(cc.dtype), cc,
                      preferred_element_type=F32)
     wvb = p["wv_b"].reshape(cfg.kv_lora, nh, hd)
     o = jnp.einsum("bqhl,lhd->bqhd", o_c.astype(wvb.dtype), wvb,
                    preferred_element_type=F32)
-    o = o.reshape(b, s, -1).astype(x.dtype)
-    return dense(o, p["wo"]), {"c_kv": cc_pool, "k_rope": cr_pool}
+    # pin before the row-parallel out-proj: wo's input-dim sharding
+    # otherwise propagates backward through the softmax/einsum chain
+    # inside the decode layer scan — involuntary-remat miscompile on
+    # the CPU SPMD backend (see dist.api.shard), observed as O(1)
+    # logit drift whenever the head count cannot split the model axis
+    o = shard(o.reshape(b, s, -1).astype(x.dtype), "residual",
+              fallback="replicate")
+    return dense(o, p["wo"]),{"c_kv": cc_pool, "k_rope": cr_pool}
 
 
 def mla_paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int,
@@ -850,6 +887,18 @@ def ssd_block_apply(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
     bsz, s, _ = x.shape
     di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.ssd_heads, cfg.ssd_headdim
     z, conv_in, dt = _ssd_in_proj(p, x, cfg)                 # (B,S,conv_dim)
+    # Anchor the SSD streams to an explicit batch-only layout (pinned
+    # replicated when the batch cannot split). Without the anchor the
+    # in-proj weight's output-dim sharding propagates into the conv
+    # shifts / head reshapes / chunked-scan cumsums below, and the SPMD
+    # partitioner reassociates those reductions (reduce-window ->
+    # collective-permute chains in tools/hlo_diff.py) — observed to
+    # change prefill logits by O(1), not just flip f32 ties, on the
+    # 2x4 host mesh whenever batch < data-axis size. Same idiom as the
+    # rope/attn_q pins in attn_apply.
+    z = shard(z, "ssd_inner", fallback="replicate")
+    conv_in = shard(conv_in, "ssd_inner", fallback="replicate")
+    dt = shard(dt, "ssd_inner", fallback="replicate")
     cw = _ssd_conv_weight(p, cfg)
 
     if not decode:
@@ -868,6 +917,11 @@ def ssd_block_apply(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
         conv = jnp.einsum("bkc,kc->bc", hist, cw)[:, None]
         new_conv_state = hist[:, 1:]
 
+    # Re-anchor after the conv: ``conv_w`` is model-sharded on its
+    # conv_dim (it is a plain >=2-D weight to the placement rules), so
+    # the shifted-add / einsum above re-introduces a model split that
+    # would otherwise flow into the chunked scan below.
+    conv = shard(conv, "ssd_inner", fallback="replicate")
     conv = jax.nn.silu(conv)
     xc, bc, cc = jnp.split(conv, [di, di + n], axis=-1)
     xh = xc.reshape(bsz, s, h, pd)
@@ -880,8 +934,13 @@ def ssd_block_apply(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
         new_ssm = final
     else:
         # single-step recurrence (update math in f32; state stored in
-        # cfg.ssd_state_dtype — bf16 halves decode state traffic)
-        st = ssm_state.astype(F32)                            # (B,H,P,N)
+        # cfg.ssd_state_dtype — bf16 halves decode state traffic).
+        # The state cache arrives model-sharded over heads
+        # (dist.rules.cache_specs); pin the step replicated — GSPMD's
+        # layout for the bh,bhp,bn->bhpn outer product otherwise hits
+        # the involuntary-full-rematerialization transition (wrong
+        # numerics on the CPU SPMD backend, see dist.api.replicated).
+        st = replicated(ssm_state.astype(F32))                # (B,H,P,N)
         dt1 = dt_full[:, 0]                                   # (B,H)
         da = jnp.exp(dt1 * a[None, :])                        # (B,H)
         dbx = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh[:, 0].astype(F32),
@@ -892,6 +951,7 @@ def ssd_block_apply(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
         new_ssm = st.astype(ssm_state.dtype)
     y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
     y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = shard(y, "ssd_inner", fallback="replicate")
     y = rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
     out = dense(y, p["w_out"])
     if decode:

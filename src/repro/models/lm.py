@@ -426,6 +426,14 @@ def _ssd_prefill(p, h, cfg: ModelConfig):
     b, s, _ = h.shape
     di, n = cfg.d_inner, cfg.d_state
     z, conv_in, dtp = L._ssd_in_proj(p, h, cfg)
+    # Same layout anchors as layers.ssd_block_apply (see the comment
+    # there): without them the in-proj / conv-weight model shardings
+    # propagate into the chunked scan and the SPMD partitioner
+    # reassociates its reductions — O(1) logit drift on host meshes
+    # whenever the batch cannot split over the data axes.
+    z = shard(z, "ssd_inner", fallback="replicate")
+    conv_in = shard(conv_in, "ssd_inner", fallback="replicate")
+    dtp = shard(dtp, "ssd_inner", fallback="replicate")
     cw = L._ssd_conv_weight(p, cfg)
     k = cfg.conv_k
     conv = sum(
@@ -433,6 +441,7 @@ def _ssd_prefill(p, h, cfg: ModelConfig):
         * cw[i]
         for i in range(k))
     conv_state = conv_in[:, s - (k - 1):, :]
+    conv = shard(conv, "ssd_inner", fallback="replicate")
     conv_act = jax.nn.silu(conv)
     xc, bc, cc = jnp.split(conv_act, [di, di + n], axis=-1)
     xh = xc.reshape(b, s, cfg.ssd_heads, cfg.ssd_headdim)
@@ -442,6 +451,7 @@ def _ssd_prefill(p, h, cfg: ModelConfig):
                           cfg.ssd_chunk)
     y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
     y = y.reshape(b, s, di).astype(h.dtype)
+    y = shard(y, "ssd_inner", fallback="replicate")
     y = L.rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
     return L.dense(y, p["w_out"]), conv_state.astype(h.dtype), final
 

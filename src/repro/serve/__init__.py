@@ -1,14 +1,16 @@
 """repro.serve — batched + continuous-batching inference loops.
 
 ``config`` owns the unified :class:`EngineConfig` every entry point
-consumes (plus the deprecated ``ServeConfig`` shim); ``engine`` owns
+consumes; ``engine`` owns
 the device loops (fixed-batch ``generate``, slot-based
 ``serve_continuous`` — contiguous or paged cache, pow2 prompt-bucketed
 prefill, copy-on-write prefix sharing — and frame-by-frame
 ``rnn_serve_frames``), all of which run sharded under the ``dist``
 rules when a mesh is supplied; ``disagg`` splits the engine into a
 prefill tier and a fixed-slot decode tier joined by explicit
-:class:`PageHandoff` remaps; ``router`` places a request trace over N
+:class:`PageHandoff` remaps; ``speculative`` drafts with a CSB-pruned
+copy of the target and verifies ``spec_k``-token runs in one
+multi-position decode step; ``router`` places a request trace over N
 engine replicas (load-aware via ``simulate_admission``) and simulates
 fleet-wide SLO attainment; ``scheduler`` owns request admission and
 slot/page-granular cache reuse; ``paging`` owns the fixed-size
@@ -16,7 +18,7 @@ token-page pool (free list + dense page table + refcounted prefix
 trie) behind the paged cache. See docs/serving.md for the end-to-end
 tour.
 """
-from .config import EngineConfig, ServeConfig
+from .config import EngineConfig
 from .disagg import (
     DecodeTier,
     PageHandoff,
@@ -40,6 +42,11 @@ from .router import (
     route,
     simulate_replicas,
 )
+from .speculative import (
+    derive_draft_params,
+    generate_speculative,
+    serve_continuous_speculative,
+)
 from .scheduler import (
     Request,
     SlotScheduler,
@@ -56,13 +63,15 @@ from .scheduler import (
 )
 
 __all__ = [
-    "EngineConfig", "ServeConfig", "ServeResult", "bucket_len",
+    "EngineConfig", "ServeResult", "bucket_len",
     "generate", "rnn_serve_frames", "serve_continuous",
     "shard_cell_params",
     "DecodeTier", "PageHandoff", "PrefillTier", "serve_disaggregated",
     "POLICIES", "Router", "RouterResult", "make_arrival_trace", "route",
     "simulate_replicas",
     "PagePool", "SharedInfo", "pages_for",
+    "derive_draft_params", "generate_speculative",
+    "serve_continuous_speculative",
     "Request", "SlotScheduler", "cache_len_of", "copy_page_cache",
     "evict_slot", "evict_slot_state", "fit_cache_len", "grow_cache",
     "insert_paged_cache", "insert_paged_span", "insert_slot_cache",

@@ -12,20 +12,18 @@ Cross-field constraints live in ``__post_init__`` so an invalid
 combination fails at construction, not three layers deep in the engine:
 ``use_kernel``/``prefix_cache``/``pool_pages`` all require ``paged``
 (the kernel walks the page table; the trie shares pages; the pool IS
-the paged budget).
+the paged budget), and the speculative knobs require ``speculative``.
 
-Deprecation (one release): the old loose kwargs still work through
-:func:`resolve_config` — they are mapped onto an ``EngineConfig`` and a
-``DeprecationWarning`` is emitted. ``ServeConfig`` remains importable
-as a warning subclass of ``EngineConfig`` so old call sites keep
-running unchanged. See docs/serving.md for the migration table.
+The one-release loose-kwargs shim (``ServeConfig`` + DeprecationWarning
+mapping in ``resolve_config``) shipped in the previous release and is
+now gone: loose kwargs raise ``TypeError`` from the real signature.
+See docs/serving.md for the migration table.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
-__all__ = ["EngineConfig", "ServeConfig", "resolve_config"]
+__all__ = ["EngineConfig", "resolve_config"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +46,12 @@ class EngineConfig:
       ``prefix_cache``   — refcounted radix-trie prompt sharing + CoW.
       ``use_kernel``     — Pallas paged-attention decode kernel.
 
+    Speculative decoding (``speculative=True``):
+      ``spec_k``           — draft tokens proposed per verify round.
+      ``draft_prune_rate`` — CSB pruning rate for the self-drafted
+                             model (0.0 => draft == target, the parity
+                             configuration).
+
     Prefill:
       ``bucket_prompts`` — pow2 prompt buckets (None: on when paged,
                            auto-off for SSD/hybrid mixers).
@@ -69,6 +73,10 @@ class EngineConfig:
     pool_pages: int | None = None
     prefix_cache: bool = False
     use_kernel: bool = False
+    # speculative decoding
+    speculative: bool = False
+    spec_k: int = 4
+    draft_prune_rate: float = 0.5
     # prefill
     bucket_prompts: bool | None = None
     # frame serving
@@ -98,68 +106,30 @@ class EngineConfig:
                 raise ValueError("pool_pages requires paged=True")
         if self.pool_pages is not None and self.pool_pages < 1:
             raise ValueError("pool_pages must be >= 1 (or None)")
+        if self.spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
+        if not 0.0 <= self.draft_prune_rate < 1.0:
+            raise ValueError("draft_prune_rate must be in [0, 1)")
+        if self.speculative and self.prefix_cache:
+            raise ValueError(
+                "speculative=True does not support prefix_cache=True "
+                "(the draft has no shared-page partial prefill)")
 
     def replace(self, **updates) -> "EngineConfig":
-        """A modified copy (re-validated); always a base EngineConfig."""
-        cfg = _as_base(self)
-        return dataclasses.replace(cfg, **updates)
+        """A modified copy (re-validated)."""
+        return dataclasses.replace(self, **updates)
 
 
-def _as_base(config: EngineConfig) -> EngineConfig:
-    """Normalize subclasses (the ServeConfig shim) to plain EngineConfig
-    so ``dataclasses.replace`` never re-enters a shim ``__init__``."""
-    if type(config) is EngineConfig:
-        return config
-    return EngineConfig(**{f.name: getattr(config, f.name)
-                           for f in dataclasses.fields(EngineConfig)})
-
-
-class ServeConfig(EngineConfig):
-    """Deprecated: the old three-field generate config. Constructs an
-    :class:`EngineConfig` and warns; removed next release."""
-
-    def __init__(self, max_new_tokens: int = 32, temperature: float = 0.0,
-                 cache_len: int | None = None):
-        warnings.warn(
-            "ServeConfig is deprecated; use repro.serve.EngineConfig "
-            "(same fields plus the serve/paging/kernel knobs)",
-            DeprecationWarning, stacklevel=2)
-        super().__init__(max_new_tokens=max_new_tokens,
-                         temperature=temperature, cache_len=cache_len)
-
-
-# the loose serve_continuous kwargs the one-release shim still accepts
-LEGACY_SERVE_KWARGS = frozenset({
-    "n_slots", "temperature", "cache_len", "paged", "page_size",
-    "pool_pages", "bucket_prompts", "prefix_cache", "use_kernel",
-    "max_new_tokens",
-})
-
-
-def resolve_config(config: EngineConfig | None, legacy: dict, *,
+def resolve_config(config: EngineConfig | None, *,
                    caller: str) -> EngineConfig:
-    """Fold deprecated loose kwargs onto an :class:`EngineConfig`.
-
-    ``legacy`` is the caller's ``**kwargs`` capture. Unknown names raise
-    ``TypeError`` (exactly like a real unexpected keyword); known ones
-    override ``config`` (or the defaults) and emit a single
-    ``DeprecationWarning`` naming the replacement field(s). The merged
-    config re-runs ``__post_init__``, so an invalid legacy combination
-    (``prefix_cache=True`` without ``paged=True``) still raises
-    ``ValueError`` as the engine always did.
-    """
-    if legacy:
-        unknown = sorted(set(legacy) - LEGACY_SERVE_KWARGS)
-        if unknown:
-            raise TypeError(
-                f"{caller}() got unexpected keyword argument(s) {unknown}")
-        named = ", ".join(f"{k}=..." for k in sorted(legacy))
-        warnings.warn(
-            f"passing {sorted(legacy)} to {caller}() is deprecated; pass "
-            f"config=EngineConfig({named}) instead (one-release shim)",
-            DeprecationWarning, stacklevel=3)
-        base = _as_base(config) if config is not None else EngineConfig()
-        return dataclasses.replace(base, **legacy)
+    """Normalize the ``config=`` argument: ``None`` means defaults, and
+    anything that is not an :class:`EngineConfig` raises ``TypeError``
+    naming the caller (the loose-kwargs shim that used to live here was
+    removed after its one-release deprecation window)."""
     if config is None:
         return EngineConfig()
-    return _as_base(config)
+    if not isinstance(config, EngineConfig):
+        raise TypeError(
+            f"{caller}() expects config=EngineConfig(...), got "
+            f"{type(config).__name__}")
+    return config

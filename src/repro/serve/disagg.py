@@ -280,8 +280,7 @@ def serve_disaggregated(params, cfg: ModelConfig,
                         requests: list[Request],
                         config: EngineConfig | None = None, *,
                         mesh=None, policy=None,
-                        rng: jax.Array | None = None,
-                        **legacy) -> ServeResult:
+                        rng: jax.Array | None = None) -> ServeResult:
     """Serve ``requests`` through split prefill/decode tiers.
 
     Requires ``config.paged=True`` — the handoff IS a page remap into
@@ -296,7 +295,7 @@ def serve_disaggregated(params, cfg: ModelConfig,
         raise NotImplementedError(
             "serve_disaggregated drives single-stream token ids; "
             "codebook models go through generate()")
-    config = resolve_config(config, legacy, caller="serve_disaggregated")
+    config = resolve_config(config, caller="serve_disaggregated")
     if not config.paged:
         raise ValueError(
             "serve_disaggregated requires config.paged=True (the "

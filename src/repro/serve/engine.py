@@ -51,7 +51,7 @@ from repro.models import ModelConfig
 from repro.models import lm as LM
 from repro.obs import metrics as obs_metrics, trace as obs_trace
 
-from .config import EngineConfig, ServeConfig, resolve_config
+from .config import EngineConfig, resolve_config
 from .paging import PagePool, pages_for
 from .scheduler import (
     _TIME_KEYS, Request, SlotScheduler, cache_len_of, copy_page_cache,
@@ -306,13 +306,19 @@ def generate(params, cfg: ModelConfig, tokens,
              rng: jax.Array | None = None, *, mesh=None, policy=None):
     """tokens: (B, S_prompt) (or (B, S, K) codebooks). Returns (B, S+new).
 
-    ``config`` is the unified :class:`EngineConfig` (the deprecated
-    ``ServeConfig`` still works — it IS an EngineConfig, plus a
-    warning). With a mesh (argument or active Rules),
-    params/cache/batch run sharded; results match the single-device
-    path token-for-token.
+    ``config`` is the unified :class:`EngineConfig`. With a mesh
+    (argument or active Rules), params/cache/batch run sharded; results
+    match the single-device path token-for-token. With
+    ``config.speculative`` a CSB-pruned self-draft proposes
+    ``spec_k``-token runs the target verifies in one multi-position
+    decode step (see serve.speculative); tokens are identical to the
+    plain path at temperature 0.
     """
-    scfg = resolve_config(config, {}, caller="generate")
+    scfg = resolve_config(config, caller="generate")
+    if scfg.speculative:
+        from .speculative import generate_speculative
+        return generate_speculative(params, cfg, tokens, scfg, rng,
+                                    mesh=mesh, policy=policy)
     b, s = tokens.shape[:2]
     total = scfg.cache_len or (s + scfg.max_new_tokens)
     runner = _Runner(params, cfg, mesh, policy)
@@ -382,16 +388,14 @@ def _gather_ctx(cache: PyTree, pages) -> PyTree:
 def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
                      config: EngineConfig | None = None, *,
                      mesh=None, policy=None,
-                     rng: jax.Array | None = None,
-                     **legacy) -> ServeResult:
+                     rng: jax.Array | None = None) -> ServeResult:
     """Serve ``requests`` (mixed prompt lengths, arriving over time)
     through ``config.n_slots`` continuously-batched decode slots.
 
     All engine knobs ride on one :class:`EngineConfig` (serve + paging
-    + kernel + prefix fields, cross-validated at construction). The old
-    loose kwargs (``n_slots=``, ``paged=``, ...) still work for one
-    release through ``**legacy`` — they map onto the config and emit a
-    ``DeprecationWarning``.
+    + kernel + prefix + speculative fields, cross-validated at
+    construction); loose kwargs raise ``TypeError`` (the one-release
+    migration shim is gone).
 
     The decode step compiles once for the (n_slots, cache_len) shapes
     and runs every step with per-slot positions; admission prefills each
@@ -456,9 +460,13 @@ def serve_continuous(params, cfg: ModelConfig, requests: list[Request],
             "serve_continuous drives single-stream token ids; codebook "
             "models go through generate()")
     # invalid combinations (prefix_cache without paged, ...) raise
-    # ValueError inside EngineConfig.__post_init__ — including legacy
-    # kwargs, which re-validate when merged onto the config here
-    config = resolve_config(config, legacy, caller="serve_continuous")
+    # ValueError inside EngineConfig.__post_init__
+    config = resolve_config(config, caller="serve_continuous")
+    if config.speculative:
+        from .speculative import serve_continuous_speculative
+        return serve_continuous_speculative(params, cfg, requests, config,
+                                            mesh=mesh, policy=policy,
+                                            rng=rng)
     n_slots, temperature = config.n_slots, config.temperature
     cache_len, paged = config.cache_len, config.paged
     page_size, pool_pages = config.page_size, config.pool_pages
@@ -813,7 +821,7 @@ def rnn_serve_frames(graph: CellGraph, params: PyTree, frames,
     ``us_per_frame`` stays the throughput number; the per-frame vector
     is for tail latency (p99) reporting, where realtime audio cares
     about the worst frame, not the average."""
-    fcfg = resolve_config(config, {}, caller="rnn_serve_frames")
+    fcfg = resolve_config(config, caller="rnn_serve_frames")
     if warmup is None:
         warmup = fcfg.frame_warmup
     if collect_frame_times is None:

@@ -348,6 +348,42 @@ class PagePool:
             self._dirty = True
         return grew
 
+    def truncate(self, slot: int, n_tokens: int) -> list[int]:
+        """Roll the slot's logical length back to ``n_tokens``
+        (speculative rollback past a rejected draft position). Whole tail
+        pages beyond ``pages_needed(n_tokens)`` are unmapped; trie-held
+        pages survive (prefix cache), purely private ones return to the
+        free list. The boundary page — committed and stale KV mixed —
+        stays mapped: stale entries sit at positions >= n_tokens, and the
+        ``kpos <= pos`` decode mask never attends them, so no device-side
+        zeroing is needed. ``write_floor`` is NOT lowered — those
+        positions were legitimately written and the next verify step will
+        overwrite them. Returns the pages actually freed."""
+        if n_tokens > self._tokens[slot]:
+            raise ValueError(
+                f"slot {slot}: truncate({n_tokens}) beyond current "
+                f"length {self._tokens[slot]}")
+        if n_tokens < self._n_shared[slot] * self.page_size:
+            raise ValueError(
+                f"slot {slot}: truncate({n_tokens}) into the shared "
+                f"prefix span ({self._n_shared[slot]} pages)")
+        keep = self.pages_needed(n_tokens)
+        freed = []
+        while self._n_alloc[slot] > keep:
+            self._n_alloc[slot] -= 1
+            page = self._table[slot][self._n_alloc[slot]]
+            self._table[slot][self._n_alloc[slot]] = -1
+            if self._ref[page] == 1:
+                freed.append(page)
+            self._unref(page)
+        self._tokens[slot] = n_tokens
+        if freed:
+            self._dirty = True
+            obs_trace.instant("serve/pool/truncate",
+                              args={"slot": slot, "n_tokens": n_tokens,
+                                    "freed": len(freed)})
+        return freed
+
     def register_prefix(self, slot: int, tokens) -> int:
         """Insert the slot's (fully prefilled) prompt pages into the trie
         so later requests can share them. Only whole pages register; the

@@ -213,7 +213,7 @@ class Router:
             raise ValueError(
                 f"engine must be 'continuous' or 'disagg', got {engine!r}")
         self.n_replicas = n_replicas
-        self.config = resolve_config(config, {}, caller="Router")
+        self.config = resolve_config(config, caller="Router")
         self.policy = policy
         self.step_time_us = _step_times(step_time_us, n_replicas)
         self.engine = engine

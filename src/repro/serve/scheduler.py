@@ -476,6 +476,28 @@ class SlotScheduler:
                 freed.append(i)
         return freed
 
+    def advance_spec(self, committed: dict[int, list[int]]) -> list[int]:
+        """One speculative round ran. ``committed[i]`` is the list of
+        tokens the rejection sampler committed for slot i this round
+        (1..k+1 tokens — every round makes progress). Slots absent from
+        ``committed`` were idle this round. Returns freed slots."""
+        self.now += 1
+        self.decode_steps += 1
+        freed = []
+        for i, toks in committed.items():
+            s = self._slots[i]
+            assert s is not None, f"advance_spec on free slot {i}"
+            assert 1 <= len(toks) <= s.remaining, \
+                f"slot {i}: committed {len(toks)} with {s.remaining} left"
+            self.active_slot_steps += 1
+            s.generated.extend(int(t) for t in toks)
+            s.pos += len(toks)
+            s.remaining -= len(toks)
+            if s.remaining == 0:
+                self._finish(i)
+                freed.append(i)
+        return freed
+
     def idle_tick(self) -> None:
         """Nothing active and nothing arrived: jump the clock to the
         next arrival instead of burning empty decode steps."""

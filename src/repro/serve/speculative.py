@@ -1,0 +1,483 @@
+"""Speculative decoding with a CSB-pruned self-draft.
+
+CSB-RNN's thesis is that compressed-structured-block pruning keeps model
+quality at high compression — exactly the property a *draft* model
+needs. Here the draft IS the target checkpoint run through the paper's
+own projection (``core.pruning.csb_project`` at ``draft_prune_rate``):
+no second checkpoint, no distillation. Each round the draft proposes
+``spec_k`` tokens autoregressively (cheap single-token steps); the
+target scores all of them in ONE multi-position decode step (the
+vector-pos paged step generalized to s = k+1 query positions, see
+``models.layers._decode_mask``); standard rejection sampling
+[Leviathan et al. 2023] then commits a prefix of the proposals plus one
+target-sampled token, so the committed stream is distributed EXACTLY as
+target-only decoding at any temperature — and token-for-token identical
+at temperature 0, where acceptance degenerates to ``draft == argmax``.
+
+Every round commits between 1 and spec_k+1 tokens: acceptance rate is
+the speed knob, and ``draft_prune_rate`` trades draft cost against it
+(rate 0 is the parity configuration: the draft equals the target and
+essentially everything is accepted).
+
+Cache bookkeeping per round (slot at committed frontier p, last
+committed-but-unwritten token ``cur``):
+
+- draft: k contiguous single-token steps write [cur, d_1..d_{k-1}] at
+  p..p+k-1 and sample d_1..d_k. Stale draft KV past a rejection is
+  overwritten next round before any query can attend it.
+- target: one (k+1)-wide paged step writes [cur, d_1..d_k] at p..p+k
+  and returns per-position logits pi_0..pi_k.
+- commit n in [1, k_eff+1] tokens; ``PagePool.truncate(slot, p+n)``
+  rolls the page table back past the first rejected position (frees
+  whole tail pages; the mixed boundary page is masked, not zeroed).
+
+RNG discipline: every sampling decision is keyed by
+``fold_in(rng, rid) -> fold_in(., token_index) -> fold_in(., purpose)``
+(purpose: proposal/bonus sample, accept-u, residual resample) — NO
+round counter. The same token index draws the same key whatever spec_k
+is, which is what makes the temperature>0 parity test (spec_k=N vs
+spec_k=1 at prune rate 0, same rng) an equality check instead of a
+statistical one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSBSpec, csb_project
+from repro.models import ModelConfig
+from repro.models import lm as LM
+from repro.obs import metrics as obs_metrics, trace as obs_trace
+
+from .config import EngineConfig
+from .engine import ServeResult, _Runner, _sampler, bucket_len
+from .paging import PagePool, pages_for
+from .scheduler import (
+    SlotScheduler, cache_len_of, evict_slot, evict_slot_state,
+    fit_cache_len, grow_cache, insert_paged_cache, insert_slot_cache,
+)
+
+PyTree = Any
+
+# fold_in purposes (see module docstring)
+_SAMPLE, _ACCEPT, _RESID = 0, 1, 2
+
+
+def derive_draft_params(params: PyTree, prune_rate: float, *,
+                        bm: int = 32, bn: int = 32) -> PyTree:
+    """The self-draft: CSB-project every layer weight matrix of the
+    target checkpoint at ``prune_rate`` (Algorithm 1's two-pass
+    row/column projection). Embeddings, heads and norm scales stay
+    intact — pruning acts on the MVM weights the paper's engine
+    accelerates. ``prune_rate=0`` returns ``params`` unchanged (the
+    bit-identical parity draft)."""
+    if prune_rate <= 0.0:
+        return params
+    spec = CSBSpec(bm=bm, bn=bn, prune_rate=float(prune_rate))
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", "")
+        if getattr(leaf, "ndim", 0) in (2, 3) and name.startswith("w"):
+            return csb_project(leaf, spec)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _key(base: jax.Array, rid: int, index: int, purpose: int) -> jax.Array:
+    k = jax.random.fold_in(base, rid)
+    k = jax.random.fold_in(k, index)
+    return jax.random.fold_in(k, purpose)
+
+
+def _categorical(key, logits, temperature: float) -> int:
+    return int(jax.random.categorical(
+        key, jnp.asarray(logits, jnp.float32) / temperature))
+
+
+def _commit_round(base_rng, rid: int, p: int, drafts, q_log, pi_log,
+                  k_eff: int, temperature: float) -> list[int]:
+    """Rejection-sample one verify round for one sequence.
+
+    ``drafts``: k proposed tokens (only the first ``k_eff`` are
+    eligible); ``q_log``: (k, V) draft logits; ``pi_log``: (k+1, V)
+    target logits, row j scoring the token at index ``p + 1 + j``.
+    Returns the committed tokens — a prefix of the accepted drafts plus
+    exactly one target-sampled token (correction on first rejection,
+    bonus on full acceptance), so every round progresses.
+    """
+    if temperature <= 0.0:
+        tgt = np.argmax(np.asarray(pi_log), axis=-1)
+        out = []
+        for j in range(k_eff):
+            if int(drafts[j]) != int(tgt[j]):
+                out.append(int(tgt[j]))          # correction
+                return out
+            out.append(int(drafts[j]))
+        out.append(int(tgt[k_eff]))              # bonus
+        return out
+    out = []
+    for j in range(k_eff):
+        idx = p + 1 + j
+        d = int(drafts[j])
+        pi_p = jax.nn.softmax(jnp.asarray(pi_log[j], jnp.float32)
+                              / temperature)
+        q_p = jax.nn.softmax(jnp.asarray(q_log[j], jnp.float32)
+                             / temperature)
+        u = float(jax.random.uniform(_key(base_rng, rid, idx, _ACCEPT)))
+        ratio = float(pi_p[d]) / max(float(q_p[d]), 1e-30)
+        if u < ratio:
+            out.append(d)
+            continue
+        # first rejection: resample the residual norm(max(pi - q, 0)).
+        # With a near-perfect draft the residual mass underflows —
+        # fall back to pi itself (the distributions coincide there).
+        res = jnp.clip(pi_p - q_p, 0.0)
+        tot = float(res.sum())
+        rkey = _key(base_rng, rid, idx, _RESID)
+        if tot < 1e-9:
+            out.append(_categorical(rkey, pi_log[j], temperature))
+        else:
+            out.append(int(jax.random.categorical(rkey, jnp.log(res))))
+        return out
+    idx = p + 1 + k_eff
+    out.append(_categorical(_key(base_rng, rid, idx, _SAMPLE),
+                            pi_log[k_eff], temperature))
+    return out
+
+
+def _propose(drf: _Runner, d_cache, cur, pos, live, rids, k: int,
+             temperature: float, base_rng):
+    """Run k+1 draft steps from frontier ``pos`` (B,) feeding ``cur``
+    (B,). Returns (proposals (k, B), draft logits (k, B, V), new draft
+    cache). The extra (k+1)-th step samples nothing — it writes d_k's
+    KV into the draft cache so a fully-accepted round (frontier jumps
+    to p+k+1 past the bonus token) leaves no unwritten position behind;
+    after a rejection the write is stale and the next round overwrites
+    it before any query attends it.
+    """
+    b = cur.shape[0]
+    drafts = np.zeros((k, b), np.int64)
+    q_logs = []
+    dcur = np.asarray(cur, np.int64)
+    for j in range(k + 1):
+        posv = drf.place_pos(jnp.asarray(pos + j, jnp.int32))
+        toks = drf.place_tokens(jnp.asarray(dcur[:, None], jnp.int32))
+        lg, d_cache = drf.step(d_cache, toks, posv)
+        if j == k:
+            break                      # KV catch-up write only
+        ql = np.asarray(lg[:, -1], np.float32)        # (B, V)
+        if temperature <= 0.0:
+            nxt = np.argmax(ql, axis=-1)
+        else:
+            nxt = np.array([
+                _categorical(_key(base_rng, int(rids[i]),
+                                  int(pos[i]) + 1 + j, _SAMPLE),
+                             ql[i], temperature) if live[i] else 0
+                for i in range(b)], np.int64)
+        drafts[j] = nxt
+        q_logs.append(ql)
+        dcur = nxt
+    return drafts, np.stack(q_logs), d_cache
+
+
+# ---------------------------------------------------------------------------
+# fixed-batch speculative generate
+# ---------------------------------------------------------------------------
+
+def generate_speculative(params, cfg: ModelConfig, tokens,
+                         scfg: EngineConfig,
+                         rng: jax.Array | None = None, *,
+                         mesh=None, policy=None):
+    """Speculative twin of :func:`repro.serve.engine.generate`:
+    same (B, S+new) output contract, token-for-token identical at
+    temperature 0. Contiguous caches for both models; per-row frontiers
+    advance by variable acceptance, rows re-verify harmlessly once done.
+    """
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "speculative decoding drives single-stream token ids")
+    if cfg.mixer not in ("attn", "mla"):
+        raise NotImplementedError(
+            "speculative decoding needs a per-position KV cache "
+            f"(attn/mla), not mixer={cfg.mixer!r}")
+    tokens = jnp.asarray(tokens)
+    b, s = tokens.shape[:2]
+    k, max_new = scfg.spec_k, scfg.max_new_tokens
+    temperature = scfg.temperature
+    # + k slack: the widest verify writes p..p+k and the contiguous
+    # dynamic_update_slice clamps its start instead of scattering, so
+    # the cache must physically hold the overhang
+    total = (scfg.cache_len or (s + max_new)) + k
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    tgt = _Runner(params, cfg, mesh, policy)
+    drf = _Runner(derive_draft_params(params, scfg.draft_prune_rate),
+                  cfg, mesh, policy)
+
+    t_log, t_cache = tgt.prefill(tokens)
+    t_cache = tgt.place_cache(
+        grow_cache(t_cache, total - cache_len_of(t_cache)))
+    _, d_cache = drf.prefill(tokens)
+    d_cache = drf.place_cache(
+        grow_cache(d_cache, total - cache_len_of(d_cache)))
+
+    sample = _sampler(cfg, temperature)
+    first = np.asarray(sample(t_log, rng)).reshape(-1)
+    out = [[int(t)] for t in first]
+    pos = np.full(b, s, np.int64)
+    cur = first.astype(np.int64)
+    rids = np.arange(b)
+    proposed = accepted = rounds = 0
+    while any(len(o) < max_new for o in out):
+        remaining = np.asarray([max_new - len(o) for o in out])
+        live = remaining > 0
+        drafts, q_logs, d_cache = _propose(
+            drf, d_cache, cur, pos, live, rids, k, temperature, rng)
+        verify = np.concatenate([cur[:, None], drafts.T], axis=1)
+        lg, t_cache = tgt.step(
+            t_cache, tgt.place_tokens(jnp.asarray(verify, jnp.int32)),
+            tgt.place_pos(jnp.asarray(pos, jnp.int32)))
+        pi = np.asarray(lg, np.float32)              # (B, k+1, V)
+        rounds += 1
+        for i in range(b):
+            if not live[i]:
+                continue
+            k_eff = min(k, int(remaining[i]) - 1)
+            committed = _commit_round(rng, int(rids[i]), int(pos[i]),
+                                      drafts[:, i], q_logs[:, i], pi[i],
+                                      k_eff, temperature)
+            out[i].extend(committed)
+            pos[i] += len(committed)
+            cur[i] = committed[-1]
+            proposed += k_eff
+            accepted += len(committed) - 1
+    gen = jnp.asarray([o[:max_new] for o in out], jnp.int32)
+    return jnp.concatenate([tokens, gen.astype(tokens.dtype)], axis=1)
+
+
+def _spec_stats(scfg: EngineConfig, rounds: int, proposed: int,
+                accepted: int) -> dict:
+    return {
+        "spec_k": scfg.spec_k,
+        "draft_prune_rate": scfg.draft_prune_rate,
+        "rounds": rounds,
+        "proposed": proposed,
+        "accepted": accepted,
+        "acceptance_rate": round(accepted / proposed, 4) if proposed
+        else 1.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching speculative serve
+# ---------------------------------------------------------------------------
+
+def serve_continuous_speculative(params, cfg: ModelConfig, requests,
+                                 config: EngineConfig, *,
+                                 mesh=None, policy=None,
+                                 rng: jax.Array | None = None
+                                 ) -> ServeResult:
+    """Speculative twin of ``serve_continuous`` (dispatched from there
+    when ``config.speculative``). Paged target cache + contiguous draft
+    cache; admission, bucketing and eviction mirror the plain engine so
+    temperature-0 tokens are identical to it. Requires ``paged=True``:
+    per-slot variable acceptance is a page-table rollback
+    (``PagePool.truncate``) — the contiguous engine has no object to
+    roll back.
+    """
+    if cfg.n_codebooks:
+        raise NotImplementedError(
+            "speculative decoding drives single-stream token ids")
+    if cfg.mixer not in ("attn", "mla"):
+        raise NotImplementedError(
+            "speculative decoding needs a per-position KV cache "
+            f"(attn/mla), not mixer={cfg.mixer!r}")
+    if not config.paged:
+        raise ValueError("speculative serve_continuous requires "
+                         "config.paged=True (rollback is a page-table "
+                         "truncate)")
+    n_slots, k = config.n_slots, config.spec_k
+    temperature = config.temperature
+    page_size, pool_pages = config.page_size, config.pool_pages
+    use_kernel = config.use_kernel
+    bucket = (config.bucket_prompts if config.bucket_prompts is not None
+              else True)
+    if not requests:
+        stats = SlotScheduler(n_slots).stats()
+        stats.update(cache_len=0, tokens_per_sec=0.0, paged=True,
+                     bucketed_prefill=bucket, prefix_cache=False,
+                     prefill_tokens=0, compile_time_s=0.0,
+                     steady_tokens_per_sec=0.0, sharded=False,
+                     speculative=_spec_stats(config, 0, 0, 0))
+        stats["paging"] = PagePool(
+            page_size, 1 if pool_pages is None else pool_pages,
+            n_slots, 1).summary()
+        stats["page_stalls"] = 0
+        return ServeResult({}, stats, 0.0)
+
+    cache_len = config.cache_len or max(
+        r.prompt_len + r.max_new_tokens for r in requests)
+    short = [r for r in requests
+             if r.prompt_len + r.max_new_tokens > cache_len]
+    if short:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold request(s) "
+            f"{[r.rid for r in short]}")
+
+    tgt = _Runner(params, cfg, mesh, policy)
+    drf = _Runner(derive_draft_params(params, config.draft_prune_rate),
+                  cfg, mesh, policy)
+    sample = _sampler(cfg, temperature)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    # decode keys must come from a FIXED base: ``rng`` itself mutates on
+    # every admission split, and how many admissions precede a given
+    # round depends on spec_k (fewer rounds -> arrivals land elsewhere),
+    # which would break the k-invariant key schedule
+    dec_rng = jax.random.fold_in(rng, 0x5bec)
+
+    # the verify step writes up to k positions past a slot's committed
+    # frontier: widen the page-table logical width so those positions
+    # map to real table entries (unmapped -> scratch) instead of
+    # clipping back into the slot's last mapped page
+    max_pages = pages_for(cache_len + k, page_size)
+    n_pool = n_slots * max_pages if pool_pages is None else pool_pages
+    pool = PagePool(page_size, n_pool, n_slots, max_pages)
+    sched = SlotScheduler(n_slots, pool=pool)
+    for r in requests:
+        sched.submit(r)
+
+    t_cache = tgt.place_cache(
+        LM.init_paged_cache(cfg, pool.n_pages, page_size, n_slots,
+                            jnp.dtype(cfg.dtype)), paged=True)
+    # contiguous draft cache, + k slack for the round's proposal writes
+    d_cache = drf.place_cache(
+        LM.init_cache(cfg, n_slots, cache_len + k, jnp.dtype(cfg.dtype)))
+    cur = np.zeros(n_slots, np.int64)
+    rid_of = np.zeros(n_slots, np.int64)
+    table_host = table_placed = None
+    tr = obs_trace.get()
+    reg = obs_metrics.get()
+    prefill_tokens = 0
+    compile_ns = steady_ns = steady_tokens = 0
+    proposed = accepted = rounds = 0
+
+    t0 = time.perf_counter()
+    while sched.has_work():
+        for slot, req in sched.admit():
+            rng, kk = jax.random.split(rng)
+            toks = np.asarray(req.tokens)
+            plen = req.prompt_len
+            t_pf = time.perf_counter_ns()
+            if bucket:
+                padded = np.pad(toks, [(0, bucket_len(plen) - plen)])
+                logits, req_cache = tgt.prefill(
+                    jnp.asarray(padded)[None], last_pos=plen - 1)
+                _, d_req = drf.prefill(
+                    jnp.asarray(padded)[None], last_pos=plen - 1)
+                prefill_tokens += int(padded.shape[0])
+            else:
+                logits, req_cache = tgt.prefill(jnp.asarray(toks)[None])
+                _, d_req = drf.prefill(jnp.asarray(toks)[None])
+                prefill_tokens += plen
+            first = int(np.asarray(sample(logits, kk)).reshape(-1)[0])
+            if tgt.last_cold:
+                compile_ns += time.perf_counter_ns() - t_pf
+            if sched.started(slot, first):
+                pool.ensure(slot, plen)
+                phys = list(pool.slot_pages(slot))
+                n_pad = 1 << max(len(phys) - 1, 0).bit_length()
+                phys += [pool.scratch_page] * (n_pad - len(phys))
+                req_cache = fit_cache_len(req_cache, len(phys) * page_size)
+                t_cache = insert_paged_cache(
+                    t_cache, tgt.place_slot_cache(req_cache), phys, slot)
+                d_cache = insert_slot_cache(
+                    d_cache, drf.place_slot_cache(
+                        fit_cache_len(d_req, plen)), slot)
+                cur[slot] = first
+                rid_of[slot] = req.rid
+        active = sched.active_mask()
+        if not active.any():
+            sched.idle_tick()
+            continue
+        pos_host = sched.positions().astype(np.int64)
+        remaining = np.asarray([
+            0 if s is None else s.remaining for s in sched._slots])
+        t_st = time.perf_counter_ns()
+        drafts, q_logs, d_cache = _propose(
+            drf, d_cache, cur, pos_host, active, rid_of, k,
+            temperature, dec_rng)
+        # map pages for every position this round's verify writes,
+        # capped at the slot's lifetime token count (overhang positions
+        # past the cap land on scratch / the masked boundary page)
+        for i in np.flatnonzero(active):
+            pool.ensure(int(i), int(min(pos_host[i] + k + 1,
+                                        pos_host[i] + remaining[i])))
+        pool.tick()
+        fresh = pool.device_table()
+        if fresh is not table_host:
+            table_host = fresh
+            table_placed = tgt.place_table(fresh)
+        verify = np.concatenate([cur[:, None], drafts.T], axis=1)
+        lg, t_cache = tgt.step_paged(
+            t_cache, tgt.place_tokens(jnp.asarray(verify, jnp.int32)),
+            tgt.place_pos(jnp.asarray(pos_host, jnp.int32)),
+            table_placed, use_kernel=use_kernel)
+        pi = np.asarray(lg, np.float32)
+        rounds += 1
+        committed: dict[int, list[int]] = {}
+        for i in np.flatnonzero(active):
+            k_eff = min(k, int(remaining[i]) - 1)
+            toks = _commit_round(dec_rng, int(rid_of[i]), int(pos_host[i]),
+                                 drafts[:, i], q_logs[:, i], pi[i],
+                                 k_eff, temperature)
+            committed[int(i)] = toks
+            proposed += k_eff
+            accepted += len(toks) - 1
+            # roll the page table back past the last committed write
+            pool.truncate(int(i), int(pos_host[i]) + len(toks))
+            cur[i] = toks[-1]
+        t_en = time.perf_counter_ns()
+        n_committed = sum(len(t) for t in committed.values())
+        if tgt.last_cold or drf.last_cold:
+            compile_ns += t_en - t_st
+        else:
+            steady_ns += t_en - t_st
+            steady_tokens += n_committed
+        if tr is not None:
+            tr.complete("serve/spec_round", t_st, t_en - t_st,
+                        track="engine",
+                        args={"committed": n_committed,
+                              "active": int(active.sum())})
+        if reg is not None:
+            reg.histogram("serve/spec/tokens_per_round").observe(
+                n_committed)
+        for slot in sched.advance_spec(committed):
+            t_cache = evict_slot_state(t_cache, slot)
+            d_cache = evict_slot(d_cache, slot)
+    jax.block_until_ready(t_cache)
+    wall = time.perf_counter() - t0
+
+    stats = sched.stats()
+    stats["cache_len"] = cache_len
+    stats["paged"] = True
+    stats["bucketed_prefill"] = bucket
+    stats["prefix_cache"] = False
+    stats["prefill_tokens"] = prefill_tokens
+    stats["tokens_per_sec"] = round(
+        stats["generated_tokens"] / wall, 3) if wall > 0 else 0.0
+    stats["compile_time_s"] = round(compile_ns / 1e9, 6)
+    stats["steady_tokens_per_sec"] = round(
+        steady_tokens / (steady_ns / 1e9), 3) if steady_ns > 0 else 0.0
+    stats["sharded"] = tgt.mesh is not None
+    stats["speculative"] = _spec_stats(config, rounds, proposed, accepted)
+    stats["paging"] = pool.summary()
+    return ServeResult(sched.results, stats, wall)
+
+
+__all__ = ["derive_draft_params", "generate_speculative",
+           "serve_continuous_speculative"]

@@ -233,3 +233,33 @@ def test_injected_disagg_regression_fails_gate():
     ok = _rec("serve", [("serve/disagg/us_per_token", 1100.0, 91.0)])
     _, failures = diff_records(ok, base, 0.25, {"serve"}, 50.0)
     assert failures == []                                   # 1.1x passes
+
+
+def test_injected_speculative_regression_fails_gate():
+    """Acceptance (ISSUE 10): serve/speculative/us_per_token is gated
+    by the same serve:/us_per pattern — an injected 1.5x regression
+    trips it, while the informational acceptance-rate and
+    speedup-vs-prune rows (us_per_call=0, payload in derived) never
+    gate no matter how far acceptance collapses."""
+    base = _rec("serve", [
+        ("serve/speculative/us_per_token", 1000.0, 100.0),
+        ("serve/speculative/acceptance", 0.0,
+         "k=4;prune=0.5;rate=0.9000;rounds=40;tokens_per_round=4.100"),
+        ("serve/speculative/speedup_vs_prune", 0.0,
+         "prune0.0:accept=1.000,speedup=1.400x"),
+    ])
+    fresh = _rec("serve", [
+        ("serve/speculative/us_per_token", 1500.0, 66.0),   # 1.5x
+        ("serve/speculative/acceptance", 0.0,
+         "k=4;prune=0.5;rate=0.0100;rounds=400;"            # collapse: ok
+         "tokens_per_round=1.010"),
+        ("serve/speculative/speedup_vs_prune", 0.0,
+         "prune0.0:accept=0.010,speedup=0.200x"),
+    ])
+    _, failures = diff_records(fresh, base, 0.25, {"serve"}, 50.0)
+    assert len(failures) == 1
+    assert "serve/speculative/us_per_token" in failures[0]
+
+    ok = _rec("serve", [("serve/speculative/us_per_token", 1100.0, 91.0)])
+    _, failures = diff_records(ok, base, 0.25, {"serve"}, 50.0)
+    assert failures == []                                   # 1.1x passes

@@ -10,8 +10,8 @@ kernel path's jaxpr no longer contains the materialized
 Also here: edge-case coverage for the paged-cache primitives
 (``paged_write`` / ``paged_gather``) — scratch-page routing for
 inactive slots, vector-pos writes straddling page boundaries,
-``max_pages=1`` pools — and a known-drift repro (xfail) for sharded
-hybrid SSD decode on the 2x4 mesh.
+``max_pages=1`` pools — and the (once-xfail, now asserting) sharded
+hybrid decode parity check on the 2x4 mesh.
 """
 import dataclasses
 import functools
@@ -397,21 +397,16 @@ def test_serve_kernel_sharded_mla_matches_gather_path(shape):
 
 
 # ---------------------------------------------------------------------------
-# known drift: sharded hybrid SSD decode on the 2x4 mesh (repro, xfail)
+# sharded hybrid decode parity on the 2x4 mesh (was an xfail drift repro
+# since PR 4; root cause was never tie-flips but unanchored GSPMD layout
+# propagation — the in-proj / conv-weight / row-parallel-wo shardings
+# leaked into the SSD chunked scan and the decode softmax chain, hitting
+# XLA's involuntary-full-rematerialization transition that miscompiles
+# on the CPU SPMD backend. Fixed by the "ssd_inner" / "residual" anchors
+# in models.layers + models.lm; see docs/known-issues.md)
 # ---------------------------------------------------------------------------
 
 @needs8
-@pytest.mark.xfail(
-    strict=False,
-    reason="sharded hybrid decode on a 2x4 mesh can drift from the "
-    "unsharded trace: the SSD state update order changes under the "
-    "data-axis batch split and f32 accumulation differences can flip "
-    "an argmax tie (tracked in ROADMAP; kernel-independent). To see "
-    "WHERE the programs diverge, run `PYTHONPATH=src python "
-    "tools/hlo_diff.py --mixer hybrid --mesh 2x4 --stage opt`: it "
-    "lowers this exact decode step both ways and prints the op-"
-    "histogram delta (the all-reduce/collective-permute sites) plus "
-    "full normalized dumps")
 def test_hybrid_sharded_decode_drift_2x4():
     mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
                 ("data", "model"))

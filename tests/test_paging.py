@@ -346,6 +346,81 @@ def run_handoff_trace(rng: np.random.Generator, n_slots: int,
     return sched.stats()
 
 
+# ---------------------------------------------------------------------------
+# speculative trace driver (rollback via truncate, ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def run_spec_trace(rng: np.random.Generator, n_slots: int, page_size: int,
+                   n_pages: int, max_pages: int, n_reqs: int,
+                   k: int) -> dict:
+    """The speculative engine's event order: each round ensures pages
+    for the whole verify span (frontier + k + 1, capped at the slot's
+    lifetime), then a random acceptance length rolls the slot back with
+    ``truncate`` — tail pages ensured for rejected positions must come
+    back to the free list immediately, with ``check()`` holding after
+    every event."""
+    if min(n_pages, max_pages) * page_size < 2:
+        page_size = 2       # smallest request (1 prompt + 1 new) must fit
+    pool = PagePool(page_size, n_pages, n_slots, max_pages)
+    sched = SlotScheduler(n_slots, pool=pool)
+    cap_tokens = min(n_pages, max_pages) * page_size
+    reqs = []
+    for i in range(n_reqs):
+        total = int(rng.integers(2, cap_tokens + 1))
+        plen = int(rng.integers(1, total))
+        reqs.append(Request(
+            rid=i, tokens=np.zeros(plen, np.int32),
+            max_new_tokens=total - plen,
+            arrival=int(rng.integers(0, 3 * n_reqs))))
+    for r in reqs:
+        sched.submit(r)
+    _reconcile(pool)
+
+    guard = sum(r.max_new_tokens + r.arrival for r in reqs) \
+        + 10 * n_reqs + 10
+    while sched.has_work():
+        for slot, req in sched.admit():
+            pool.ensure(slot, req.prompt_len)
+            _reconcile(pool)
+            sched.started(slot, int(rng.integers(0, 100)))
+            _reconcile(pool)
+        active = sched.active_mask()
+        if not active.any():
+            sched.idle_tick()
+            guard -= 1
+            assert guard > 0, "spec trace did not terminate (idle)"
+            continue
+        pos = sched.positions()
+        remaining = np.asarray([
+            0 if s is None else s.remaining for s in sched._slots])
+        # verify-span ensure: frontier + k + 1 capped at lifetime tokens
+        for i in np.flatnonzero(active):
+            pool.ensure(int(i), int(min(pos[i] + k + 1,
+                                        pos[i] + remaining[i])))
+            _reconcile(pool)
+        pool.tick()
+        committed = {}
+        for i in np.flatnonzero(active):
+            k_eff = min(k, int(remaining[i]) - 1)
+            n = int(rng.integers(1, k_eff + 2))       # 1..k_eff+1
+            committed[int(i)] = [int(t) for t in
+                                 rng.integers(0, 100, size=n)]
+            pool.truncate(int(i), int(pos[i]) + n)
+            _reconcile(pool)
+        sched.advance_spec(committed)
+        _reconcile(pool)
+        guard -= 1
+        assert guard > 0, "spec trace did not terminate"
+
+    assert pool.allocated_total() == 0, "pages leaked at end of trace"
+    assert pool.reserved_total() == 0
+    assert sorted(pool._free) == list(range(n_pages))
+    assert len(sched.results) == n_reqs
+    for r in reqs:
+        assert len(sched.results[r.rid]) == r.max_new_tokens
+    return sched.stats()
+
+
 @pytest.mark.parametrize("sweep", range(N_SWEEPS))
 def test_fuzz_random_traces(sweep):
     rng = np.random.default_rng(7919 * sweep + 13)
@@ -357,6 +432,22 @@ def test_fuzz_random_traces(sweep):
         n_pages = int(rng.integers(1, n_slots * max_pages + 2))
         n_reqs = int(rng.integers(1, 13))
         run_trace(rng, n_slots, page_size, n_pages, max_pages, n_reqs)
+
+
+@pytest.mark.parametrize("sweep", range(N_SWEEPS))
+def test_fuzz_spec_traces(sweep):
+    """240 speculative traces: verify-span ensure followed by a random-
+    acceptance truncate every round, oracle after every event."""
+    rng = np.random.default_rng(6700417 * sweep + 17)
+    for _ in range(TRACES_PER_SWEEP):
+        n_slots = int(rng.integers(1, 6))
+        page_size = int(rng.integers(1, 9))
+        max_pages = int(rng.integers(1, 9))
+        n_pages = int(rng.integers(1, n_slots * max_pages + 2))
+        n_reqs = int(rng.integers(1, 13))
+        k = int(rng.integers(1, 6))
+        run_spec_trace(rng, n_slots, page_size, n_pages, max_pages,
+                       n_reqs, k)
 
 
 def test_fuzz_starved_pool_stalls_but_completes():
@@ -507,6 +598,60 @@ def test_release_is_idempotent_and_exact():
     assert pool.available() == 4
 
 
+def test_truncate_frees_exact_tail_and_keeps_boundary():
+    pool = PagePool(4, 8, 2, 4)
+    pool.reserve(0, 16)
+    pool.ensure(0, 14)                  # 4 pages mapped
+    pages = pool.slot_pages(0)
+    assert len(pages) == 4
+    freed = pool.truncate(0, 6)         # needs 2 pages
+    assert sorted(freed) == sorted(pages[2:])
+    assert pool.slot_pages(0) == pages[:2]
+    pool.check()
+    # mid-page rollback within the same page count frees nothing: the
+    # boundary page stays (its tail positions are masked, not zeroed)
+    assert pool.truncate(0, 5) == []
+    assert pool.slot_pages(0) == pages[:2]
+    pool.check()
+    # re-growing after a rollback maps fresh pages from the free list
+    pool.ensure(0, 9)
+    assert len(pool.slot_pages(0)) == 3
+    pool.check()
+
+
+def test_truncate_beyond_length_raises():
+    pool = PagePool(4, 8, 2, 4)
+    pool.reserve(0, 8)
+    pool.ensure(0, 8)
+    with pytest.raises(ValueError, match="beyond"):
+        pool.truncate(0, 9)
+    pool.check()
+
+
+def test_truncate_into_shared_span_raises():
+    """A slot whose prompt pages are shared via the trie must never roll
+    back into the shared span — those pages belong to other readers."""
+    pool = PagePool(4, 8, 2, 4, prefix_cache=True)
+    sched = SlotScheduler(2, pool=pool)
+    a = np.asarray([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+    sched.submit(Request(rid=0, tokens=a, max_new_tokens=4))
+    sched.submit(Request(rid=1, tokens=np.asarray(
+        list(a[:4]) + [9] * 4, np.int32), max_new_tokens=4, arrival=1))
+    [(s0, r0)] = sched.admit(limit=1)
+    pool.ensure(s0, r0.prompt_len)
+    pool.register_prefix(s0, r0.tokens)
+    sched.started(s0, 0)
+    sched.advance(np.zeros(2, np.int64))
+    [(s1, r1)] = sched.admit(limit=1)
+    assert pool.shared_info(s1).shared_pages == 1
+    pool.cow_if_needed(s1)
+    pool.ensure(s1, r1.prompt_len)
+    with pytest.raises(ValueError, match="shared"):
+        pool.truncate(s1, 3)            # inside the shared first page
+    pool.truncate(s1, 4)                # exactly the shared span: ok
+    pool.check()
+
+
 def test_over_capacity_request_rejected_at_submit():
     pool = PagePool(4, 4, 2, 4)         # 16-token pool
     sched = SlotScheduler(2, pool=pool)
@@ -530,6 +675,16 @@ def test_constructor_validation():
 # ---------------------------------------------------------------------------
 # shrunk regression cases (committed from fuzz failures during bring-up)
 # ---------------------------------------------------------------------------
+
+def test_regression_spec_trace_tiny_pool_truncates_cleanly():
+    """Shrunk speculative shape: a 2-page pool with k far beyond the
+    pool's span — every round over-ensures to the cap and rolls back;
+    nothing may leak across the repeated grow/shrink cycles."""
+    rng = np.random.default_rng(1)
+    stats = run_spec_trace(rng, n_slots=1, page_size=2, n_pages=2,
+                           max_pages=2, n_reqs=3, k=4)
+    assert stats["requests"] == 3
+
 
 def test_regression_one_page_pool_serial_reuse():
     """Smallest interesting pool: 1 page, 1 slot. Two requests must run

@@ -1,10 +1,11 @@
-"""EngineConfig: validation, the legacy-kwarg shim, the ServeConfig shim.
+"""EngineConfig: validation and the post-shim strict signature.
 
 The unified config is the API surface every serve entry point consumes,
 so this file holds the contract: every cross-field rule fails at
-construction; every old loose kwarg still works for one release but
-warns and lands on the SAME engine behavior (token-for-token); unknown
-kwargs raise TypeError like any real signature would.
+construction, loose kwargs raise TypeError from the real signature (the
+one-release DeprecationWarning shim and the ServeConfig subclass are
+gone), and ``resolve_config`` rejects anything that is not an
+EngineConfig.
 """
 import dataclasses
 import warnings
@@ -15,9 +16,7 @@ import pytest
 
 from repro.models import ModelConfig
 from repro.models import init_params as lm_init
-from repro.serve import (
-    EngineConfig, Request, ServeConfig, generate, serve_continuous,
-)
+from repro.serve import EngineConfig, Request, generate, serve_continuous
 from repro.serve.config import resolve_config
 
 CFG = ModelConfig(name="tiny-cfg", mixer="attn", ffn="swiglu", n_layers=2,
@@ -54,6 +53,9 @@ def _requests(n=4, seed=3):
     (dict(prefix_cache=True), "prefix_cache=True requires paged=True"),
     (dict(pool_pages=8), "pool_pages requires paged=True"),
     (dict(paged=True, pool_pages=0), "pool_pages"),
+    (dict(spec_k=0), "spec_k"),
+    (dict(draft_prune_rate=1.0), "draft_prune_rate"),
+    (dict(draft_prune_rate=-0.1), "draft_prune_rate"),
 ])
 def test_invalid_configs_raise(kw, match):
     with pytest.raises(ValueError, match=match):
@@ -64,6 +66,12 @@ def test_valid_paged_combination():
     c = EngineConfig(paged=True, page_size=8, pool_pages=4,
                      prefix_cache=True, use_kernel=True)
     assert c.paged and c.prefix_cache and c.use_kernel
+
+
+def test_valid_speculative_combination():
+    c = EngineConfig(paged=True, speculative=True, spec_k=2,
+                     draft_prune_rate=0.0)
+    assert c.speculative and c.spec_k == 2 and c.draft_prune_rate == 0.0
 
 
 def test_replace_revalidates_and_returns_base():
@@ -83,64 +91,35 @@ def test_config_is_frozen_and_hashable():
 
 
 # ---------------------------------------------------------------------------
-# resolve_config: the one-release loose-kwarg shim
+# the shim is gone: loose kwargs are real TypeErrors now
 # ---------------------------------------------------------------------------
 
-def test_resolve_legacy_kwargs_warn_and_override():
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        c = resolve_config(None, {"n_slots": 2, "paged": True,
-                                  "page_size": 8}, caller="t")
-    assert (c.n_slots, c.paged, c.page_size) == (2, True, 8)
-    # legacy kwargs override an explicit config field-by-field
-    with pytest.warns(DeprecationWarning):
-        c2 = resolve_config(EngineConfig(n_slots=4, max_new_tokens=7),
-                            {"n_slots": 2}, caller="t")
-    assert c2.n_slots == 2 and c2.max_new_tokens == 7
+def test_loose_kwargs_raise_typeerror(params):
+    with pytest.raises(TypeError, match="n_slots"):
+        serve_continuous(params, CFG, _requests(2), n_slots=2)
+    with pytest.raises(TypeError, match="paged"):
+        serve_continuous(params, CFG, _requests(2),
+                         EngineConfig(n_slots=2), paged=True)
 
 
-def test_resolve_unknown_kwarg_raises_typeerror():
-    with pytest.raises(TypeError, match="unexpected keyword"):
-        resolve_config(None, {"slots": 2}, caller="serve_continuous")
+def test_serveconfig_is_gone():
+    with pytest.raises(ImportError):
+        from repro.serve import ServeConfig  # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.serve.config import ServeConfig  # noqa: F401
 
 
-def test_resolve_legacy_combination_still_validated():
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="prefix_cache"):
-            resolve_config(None, {"prefix_cache": True}, caller="t")
+def test_resolve_rejects_non_config():
+    with pytest.raises(TypeError, match="generate\\(\\) expects"):
+        resolve_config({"n_slots": 2}, caller="generate")
 
 
-def test_resolve_no_legacy_no_warning():
+def test_resolve_passthrough_no_warning():
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert resolve_config(None, {}, caller="t") == EngineConfig()
+        assert resolve_config(None, caller="t") == EngineConfig()
         c = EngineConfig(n_slots=2)
-        assert resolve_config(c, {}, caller="t") is c
-
-
-# ---------------------------------------------------------------------------
-# behavior parity through the shims (the one-release guarantee)
-# ---------------------------------------------------------------------------
-
-def test_legacy_serve_kwargs_behave_identically(params):
-    reqs = _requests()
-    new = serve_continuous(params, CFG, reqs,
-                           EngineConfig(n_slots=2, paged=True,
-                                        page_size=4))
-    with pytest.warns(DeprecationWarning, match="serve_continuous"):
-        old = serve_continuous(params, CFG, _requests(), n_slots=2,
-                               paged=True, page_size=4)
-    assert old.tokens == new.tokens
-    assert old.stats["paged"] and old.stats["requests"] == len(reqs)
-
-
-def test_serveconfig_shim_warns_and_generates(params):
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 50)
-    with pytest.warns(DeprecationWarning, match="ServeConfig"):
-        scfg = ServeConfig(max_new_tokens=4)
-    assert isinstance(scfg, EngineConfig)
-    ref = generate(params, CFG, prompt, EngineConfig(max_new_tokens=4))
-    out = generate(params, CFG, prompt, scfg)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert resolve_config(c, caller="t") is c
 
 
 def test_new_style_emits_no_deprecation(params):
@@ -148,3 +127,9 @@ def test_new_style_emits_no_deprecation(params):
         warnings.simplefilter("error", DeprecationWarning)
         serve_continuous(params, CFG, _requests(2),
                          EngineConfig(n_slots=2))
+
+
+def test_generate_accepts_config(params):
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 50)
+    out = generate(params, CFG, prompt, EngineConfig(max_new_tokens=4))
+    assert np.asarray(out).shape == (2, 10)

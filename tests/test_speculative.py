@@ -1,0 +1,313 @@
+"""Speculative decoding with a CSB-pruned self-draft (ISSUE 10).
+
+Acceptance: speculative ``serve_continuous`` is token-for-token
+identical to the plain engine at temperature 0 — attn and MLA,
+unsharded and on 1x8 / 2x4 host meshes (mesh cases need 8 devices; CI
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — and
+``PagePool.check()`` holds after every rollback (``truncate`` is
+monkeypatched to self-check here).
+
+Edge cases pinned below: spec_k=1 degenerates to plain decode, an
+all-rejected round still commits the target's token, page-boundary
+acceptance rolls the paged cache back without leaking pages, and
+temperature>0 sampling is k-invariant under fixed keys (the
+token-index-keyed RNG schedule makes spec_k a pure performance knob).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.models import ModelConfig
+from repro.models import init_params as lm_init
+from repro.serve import (
+    EngineConfig, PagePool, Request, derive_draft_params, generate,
+    serve_continuous,
+)
+from repro.serve.speculative import _commit_round
+
+CFG = ModelConfig(name="tiny-spec", mixer="attn", ffn="swiglu",
+                  n_layers=2, d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                  d_ff=64, vocab=50, dtype="float32", logit_chunk=16,
+                  remat=False)
+WIN = dataclasses.replace(CFG, name="tiny-spec-win", window=6)
+MLA = ModelConfig(name="tiny-spec-mla", mixer="mla", ffn="swiglu",
+                  n_layers=2, d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                  d_ff=64, vocab=50, kv_lora=16, q_lora=16,
+                  rope_head_dim=8, dtype="float32", logit_chunk=16,
+                  remat=False)
+PAGED = EngineConfig(n_slots=2, paged=True, page_size=4)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def spec_cfg(base=PAGED, k=3, rate=0.5, **kw):
+    return base.replace(speculative=True, spec_k=k,
+                        draft_prune_rate=rate, **kw)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm_init(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def mla_params():
+    return lm_init(jax.random.PRNGKey(2), MLA)
+
+
+def _trace(seed=3, n=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, 50, size=int(
+                        rng.integers(4, 12))),
+                    max_new_tokens=int(rng.integers(3, 9)),
+                    arrival=(i // 2) * 2)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the self-draft
+# ---------------------------------------------------------------------------
+
+def test_derive_draft_rate0_is_identity(params):
+    draft = derive_draft_params(params, 0.0)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(draft)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_derive_draft_prunes_weights_only(params):
+    draft = derive_draft_params(params, 0.6)
+    flat_p = dict(jax.tree_util.tree_flatten_with_path(params)[0][:0]) \
+        or None
+    p_leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    d_leaves = jax.tree_util.tree_flatten_with_path(draft)[0]
+    pruned = kept = 0
+    for (path, pl), (_, dl) in zip(p_leaves, d_leaves):
+        name = getattr(path[-1], "key", "")
+        pl, dl = np.asarray(pl), np.asarray(dl)
+        if pl.ndim in (2, 3) and name.startswith("w"):
+            # CSB projection zeroes mass; the surviving entries are the
+            # original values
+            assert (dl == 0).mean() > 0.2, name
+            nz = dl != 0
+            np.testing.assert_array_equal(dl[nz], pl[nz])
+            pruned += 1
+        else:
+            np.testing.assert_array_equal(pl, dl)
+            kept += 1
+    assert pruned > 0 and kept > 0
+    del flat_p
+
+
+# ---------------------------------------------------------------------------
+# rejection-sampler unit behavior
+# ---------------------------------------------------------------------------
+
+def test_all_rejected_round_still_commits_target_token():
+    """Every draft disagrees with the target argmax: the round must
+    commit exactly one token — the target's own — so decode always
+    progresses regardless of draft quality."""
+    v, k = 8, 3
+    pi = np.full((k + 1, v), -10.0, np.float32)
+    pi[:, 5] = 10.0                      # target argmax is 5 everywhere
+    drafts = np.asarray([1, 2, 3])       # never 5
+    out = _commit_round(jax.random.PRNGKey(0), rid=0, p=4, drafts=drafts,
+                        q_log=pi[:k], pi_log=pi, k_eff=k, temperature=0.0)
+    assert out == [5]
+
+
+def test_full_acceptance_commits_k_plus_bonus():
+    v, k = 8, 3
+    pi = np.full((k + 1, v), -10.0, np.float32)
+    for j, t in enumerate([1, 2, 3, 4]):
+        pi[j, t] = 10.0                  # argmax chain 1,2,3 then bonus 4
+    out = _commit_round(jax.random.PRNGKey(0), rid=0, p=4,
+                        drafts=np.asarray([1, 2, 3]), q_log=pi[:k],
+                        pi_log=pi, k_eff=k, temperature=0.0)
+    assert out == [1, 2, 3, 4]
+
+
+def test_k_eff_zero_commits_one_target_token():
+    """remaining == 1: no drafts are eligible, the round reduces to one
+    target sample (the serve loop's last-token round)."""
+    v = 8
+    pi = np.full((4, v), -10.0, np.float32)
+    pi[0, 6] = 10.0
+    out = _commit_round(jax.random.PRNGKey(0), rid=0, p=4,
+                        drafts=np.asarray([1, 2, 3]), q_log=pi[:3],
+                        pi_log=pi, k_eff=0, temperature=0.0)
+    assert out == [6]
+
+
+# ---------------------------------------------------------------------------
+# generate parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg_key", ["attn", "window"])
+@pytest.mark.parametrize("k,rate", [(1, 0.0), (1, 0.5), (4, 0.0),
+                                    (4, 0.5)])
+def test_generate_greedy_parity(params, cfg_key, k, rate):
+    cfg = {"attn": CFG, "window": WIN}[cfg_key]
+    p = params if cfg is CFG else lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 50)
+    base = generate(p, cfg, prompt, EngineConfig(max_new_tokens=8))
+    spec = generate(p, cfg, prompt,
+                    EngineConfig(max_new_tokens=8, speculative=True,
+                                 spec_k=k, draft_prune_rate=rate))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(spec))
+
+
+def test_generate_temperature_k_invariant(params):
+    """Fixed-key schedule: with a perfect draft (prune rate 0) the
+    committed stream at temperature>0 is the same whatever spec_k is —
+    spec_k=1/rate=0 IS the target-only sampler, so this is the
+    distributional-parity check as an equality."""
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 50)
+    rng = jax.random.PRNGKey(7)
+    outs = [np.asarray(generate(
+        params, CFG, prompt,
+        EngineConfig(max_new_tokens=10, temperature=0.8,
+                     speculative=True, spec_k=k, draft_prune_rate=0.0),
+        rng)) for k in (1, 2, 4)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ---------------------------------------------------------------------------
+# serve parity (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,rate", [(1, 0.0), (3, 0.0), (3, 0.5)])
+def test_serve_spec_matches_plain_attn(params, k, rate):
+    reqs = _trace()
+    plain = serve_continuous(params, CFG, reqs, PAGED)
+    spec = serve_continuous(params, CFG, reqs, spec_cfg(k=k, rate=rate))
+    assert spec.tokens == plain.tokens
+    st = spec.stats["speculative"]
+    assert st["spec_k"] == k and st["rounds"] > 0
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    if rate == 0.0:
+        # perfect draft: every eligible proposal must be accepted
+        assert st["acceptance_rate"] == 1.0
+
+
+def test_serve_spec_matches_plain_mla(mla_params):
+    reqs = _trace(seed=5)
+    plain = serve_continuous(mla_params, MLA, reqs, PAGED)
+    spec = serve_continuous(mla_params, MLA, reqs, spec_cfg(k=3, rate=0.3))
+    assert spec.tokens == plain.tokens
+
+
+def test_serve_spec_k1_degenerates_to_plain(params):
+    """spec_k=1 with a perfect draft is plain decode wearing the verify
+    loop: same tokens, acceptance 1.0, one committed token per proposal
+    round plus the bonus."""
+    reqs = _trace(seed=9, n=4)
+    plain = serve_continuous(params, CFG, reqs, PAGED)
+    spec = serve_continuous(params, CFG, reqs, spec_cfg(k=1, rate=0.0))
+    assert spec.tokens == plain.tokens
+    st = spec.stats["speculative"]
+    assert st["acceptance_rate"] == 1.0
+    assert st["proposed"] == st["accepted"]
+
+
+def test_serve_spec_garbage_draft_still_exact(params):
+    """Near-total pruning makes the draft useless — acceptance collapses
+    but correctness must not: rejection sampling falls back to the
+    target's token every round."""
+    reqs = _trace(seed=11, n=4)
+    plain = serve_continuous(params, CFG, reqs, PAGED)
+    spec = serve_continuous(params, CFG, reqs, spec_cfg(k=4, rate=0.9))
+    assert spec.tokens == plain.tokens
+    st = spec.stats["speculative"]
+    assert st["acceptance_rate"] < 1.0
+
+
+def test_serve_temperature_k_invariant(params):
+    reqs = _trace(seed=13)
+    key = jax.random.PRNGKey(42)
+    runs = [serve_continuous(
+        params, CFG, reqs,
+        spec_cfg(k=k, rate=0.0, temperature=0.8), rng=key).tokens
+        for k in (1, 4)]
+    assert runs[0] == runs[1]
+
+
+@needs8
+@pytest.mark.parametrize("shape", [(1, 8), (2, 4)],
+                         ids=["mesh1x8", "mesh2x4"])
+def test_serve_spec_sharded_matches_unsharded(params, shape):
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(shape),
+                ("data", "model"))
+    reqs = _trace(seed=6)
+    cfg = spec_cfg(k=3, rate=0.3)
+    ref = serve_continuous(params, CFG, reqs, cfg)
+    res = serve_continuous(params, CFG, reqs, cfg, mesh=mesh)
+    assert res.stats["sharded"]
+    assert res.tokens == ref.tokens
+
+
+# ---------------------------------------------------------------------------
+# rollback: page-boundary acceptance must not corrupt or leak pages
+# ---------------------------------------------------------------------------
+
+def test_rollback_preserves_pool_invariants(params, monkeypatch):
+    """Every speculative round ends in a ``PagePool.truncate``; with
+    page_size=2 and spec_k=5 the verify span crosses page boundaries
+    nearly every round, so rollbacks constantly free tail pages. The
+    full allocator oracle (``check()``) must hold after each one — and
+    the tokens still match the plain engine exactly."""
+    calls = []
+    orig = PagePool.truncate
+
+    def checked(self, slot, n_tokens):
+        freed = orig(self, slot, n_tokens)
+        self.check()
+        calls.append(len(freed))
+        return freed
+
+    monkeypatch.setattr(PagePool, "truncate", checked)
+    reqs = _trace(seed=17, n=6)
+    small = EngineConfig(n_slots=2, paged=True, page_size=2)
+    plain = serve_continuous(params, CFG, reqs, small)
+    spec = serve_continuous(
+        params, CFG, reqs,
+        small.replace(speculative=True, spec_k=5, draft_prune_rate=0.6))
+    assert spec.tokens == plain.tokens
+    assert calls, "speculative serve never truncated"
+    assert sum(calls) > 0, "no rollback ever freed a page"
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_spec_serve_requires_paged(params):
+    with pytest.raises(ValueError, match="paged=True"):
+        serve_continuous(params, CFG, _trace(n=2),
+                         EngineConfig(n_slots=2, speculative=True))
+
+
+def test_spec_rejects_stateful_mixer():
+    hyb = ModelConfig(name="tiny-spec-hyb", family="hybrid",
+                      mixer="hybrid", ffn="swiglu", n_layers=2,
+                      d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                      d_ff=64, vocab=50, d_state=8, ssd_headdim=16,
+                      ssd_chunk=4, ssd_expand=2, conv_k=4,
+                      dtype="float32", logit_chunk=16, remat=False)
+    p = lm_init(jax.random.PRNGKey(1), hyb)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 50)
+    with pytest.raises(NotImplementedError, match="per-position"):
+        generate(p, hyb, prompt,
+                 EngineConfig(max_new_tokens=4, speculative=True))
+
+
+def test_spec_empty_requests(params):
+    res = serve_continuous(params, CFG, [], spec_cfg())
+    assert res.tokens == {}
+    assert res.stats["speculative"]["rounds"] == 0
